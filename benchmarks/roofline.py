@@ -1,0 +1,186 @@
+"""Roofline analysis (deliverable (g), EXPERIMENTS.md §Roofline).
+
+Reads the dry-run JSONs (experiments/dryrun/*.json) and derives, per
+(arch × shape × mesh):
+
+    compute term    = FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HBM_bytes_per_device / HBM_bw           [s]
+    collective term = wire_bytes_per_device / ICI_link_bw     [s]
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(conservative single-link bottleneck; inter-pod DCI counted at 25 GB/s).
+
+Also reports MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N_active·B
+decode), the useful-compute ratio MODEL/HLO, the dominant term, and the
+roofline fraction  max-term / sum-of-terms-bound:
+
+    step_time_lower_bound ≈ max(terms)      (perfect overlap)
+    roofline_fraction     = compute_term / max(terms)
+
+— i.e. how close the cell is to being compute-bound at peak; 1.0 means the
+MXU is the binding resource (the best a lowering can do).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (conservative)
+DCI_BW = 25e9                # inter-pod
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def _params(arch: str) -> Dict[str, float]:
+    if arch not in _PARAM_CACHE:
+        from repro.configs import get_config
+        from repro.models.params import param_count
+        from repro.models.transformer import model_defs
+        cfg = get_config(arch)
+        total = param_count(model_defs(cfg))
+        active = cfg.active_param_count_estimate()
+        # scale estimate to the exact total (estimates share structure)
+        est_total = cfg.param_count_estimate()
+        if est_total > 0:
+            active = active / est_total * total
+        _PARAM_CACHE[arch] = {"total": float(total), "active": float(active)}
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Global useful FLOPs of one step: 6·N·D train, 2·N·D prefill,
+    2·N_active·B decode (one token per sequence)."""
+    from repro.configs import SHAPES
+    p = _params(arch)
+    sh = SHAPES[shape]
+    tokens = sh.global_batch * sh.seq_len
+    if sh.kind == "train":
+        return 6.0 * p["active"] * tokens
+    if sh.kind == "prefill":
+        return 2.0 * p["active"] * tokens
+    return 2.0 * p["active"] * sh.global_batch     # decode: 1 new token/seq
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    args_gb_per_device: float
+    compile_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound spent at peak MXU — 1.0 = compute-
+        bound (cannot do better by changing the distribution/layout)."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/masking waste."""
+        return (self.model_flops / self.hlo_flops_global
+                if self.hlo_flops_global else 0.0)
+
+
+def load_cell(path: pathlib.Path) -> Optional[Cell]:
+    d = json.loads(path.read_text())
+    cost = d.get("cost")
+    if not cost:
+        return None
+    wire = cost["collective_wire_per_device"]
+    inter = cost.get("collective_wire_interpod", 0.0)
+    coll_s = (wire - inter) / ICI_BW + inter / DCI_BW
+    # TPU-fusion bytes model when available (raw CPU-HLO bytes count every
+    # unfused elementwise intermediate a TPU would keep in VMEM)
+    hbm = cost.get("bytes_fused_per_device", cost["bytes_per_device"])
+    return Cell(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+        devices=d["devices"],
+        compute_s=cost["flops_per_device"] / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll_s,
+        model_flops=model_flops(d["arch"], d["shape"]),
+        hlo_flops_global=cost["flops_per_device"] * d["devices"],
+        args_gb_per_device=(d.get("arg_bytes_per_device") or 0) / 1e9,
+        compile_s=d.get("compile_s", 0.0),
+    )
+
+
+def load_all(dirpath="experiments/dryrun") -> List[Cell]:
+    cells = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        c = load_cell(p)
+        if c:
+            cells.append(c)
+    return cells
+
+
+ADVICE = {
+    "compute": "compute-bound: already at the MXU roofline — gains only "
+               "from cutting redundant FLOPs (remat policy, causal skip)",
+    "memory": "HBM-bound: raise arithmetic intensity (larger tiles/fusion, "
+              "smaller dtype, fewer materialised intermediates)",
+    "collective": "collective-bound: change sharding to cut gathered bytes "
+                  "(SP residuals, expert-parallel a2a, int8 pod reduce)",
+}
+
+
+def table(cells: List[Cell], mesh: str = "16x16") -> str:
+    rows = [c for c in cells if c.mesh == mesh]
+    rows.sort(key=lambda c: (c.arch, c.shape))
+    out = ["| arch | shape | compute s | memory s | collective s | bound | "
+           "roofline | MODEL/HLO | args GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in rows:
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3e} | {c.memory_s:.3e}"
+            f" | {c.collective_s:.3e} | {c.dominant} |"
+            f" {c.roofline_fraction:.2f} | {c.useful_ratio:.2f} |"
+            f" {c.args_gb_per_device:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    dirpath = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    cells = load_all(dirpath)
+    if not cells:
+        print("no dry-run results found — run repro.launch.dryrun first")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        sub = [c for c in cells if c.mesh == mesh]
+        if not sub:
+            continue
+        print(f"\n== mesh {mesh} ({len(sub)} cells) ==")
+        print(table(cells, mesh))
+    print("\nworst roofline fractions (single-pod):")
+    sp = sorted((c for c in cells if c.mesh == "16x16"),
+                key=lambda c: c.roofline_fraction)
+    for c in sp[:5]:
+        print(f"  {c.arch} × {c.shape}: {c.roofline_fraction:.3f} "
+              f"({c.dominant}-bound) — {ADVICE[c.dominant]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One table per paper claim (§5.1 loops, §5.2 cycles, DRAM traffic, compiler
+throughput, simulator throughput) + kernel micro-benches + the roofline
+summary from the latest dry-run sweep.  Output: ``name,value,paper,derived``
+CSV rows, with PASS/DIFF annotations against the paper's numbers.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks import kernel_bench, lenet_tables
+
+    print("name,value,paper,derived/status")
+    failures = 0
+    for row in lenet_tables.all_tables():
+        paper = row.get("paper")
+        status = ""
+        if paper is not None:
+            exact = {"gemm_loops/total", "cycles/tensor_gemm",
+                     "simd_cpu_cycles"}
+            if row["name"] in exact:
+                status = "PASS(exact)" if row["value"] == paper else \
+                    f"FAIL(expected {paper})"
+                if "FAIL" in status:
+                    failures += 1
+            else:
+                status = row.get("note", "") or f"paper={paper}"
+        print(f"{row['name']},{row['value']},"
+              f"{paper if paper is not None else ''},{status}")
+
+    for row in kernel_bench.all_tables():
+        print(f"{row['name']},{row['value']},,{row.get('derived', '')}")
+
+    # roofline summary (prefer the final sweep, fall back to baseline)
+    dry = pathlib.Path("experiments/final")
+    if not (dry.exists() and any(dry.glob("*.json"))):
+        dry = pathlib.Path("experiments/dryrun")
+    if dry.exists() and any(dry.glob("*.json")):
+        from benchmarks import roofline
+        cells = roofline.load_all(str(dry))
+        sp = [c for c in cells if c.mesh == "16x16"]
+        for c in sorted(sp, key=lambda c: (c.arch, c.shape)):
+            print(f"roofline/{c.arch}/{c.shape},"
+                  f"{c.roofline_fraction:.3f},,bound={c.dominant}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serve an LM with batched requests through the production serving engine
+(prefill + KV-cache decode + continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+                                               [--requests 6]
+
+Any of the 10 assigned architectures works (reduced smoke config on CPU);
+the same engine lowers the full configs in the multi-pod dry-run.
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    import sys
+    serve_main()

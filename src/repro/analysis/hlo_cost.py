@@ -1,0 +1,442 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while body ONCE — useless for
+scanned layer stacks (a 36-layer scan under-reports 36×, nested microbatch
+and attention-chunk scans compound to ~10⁵×).  XLA's optimized HLO carries
+``backend_config={"known_trip_count":{"n":…}}`` on every while, so this
+module walks the module text and accumulates, with trip multiplication:
+
+* FLOPs       — dot (2·|out|·|contract|), convolution, elementwise/reduce;
+* HBM bytes   — at *fusion granularity* (a fusion's internals stay in
+  registers/VMEM: bytes = its operands + outputs; parameters/GTE/bitcast/
+  tuple are free; dynamic-update-slice is in-place: update bytes only);
+* collective wire bytes — per op kind, with ring-transfer factors and the
+  participant-group size parsed from ``replica_groups``; groups spanning
+  device blocks of 256 are classified inter-pod (DCI) vs intra-pod (ICI).
+
+Shapes in the post-SPMD module are PER-PARTITION, so every number is
+per-device — exactly what the roofline terms want.
+
+Validated in tests/test_hlo_cost.py against analytically-known programs
+(matmul under lax.scan, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*(\(?[^,()]*(?:\([^)]*\))?[^,]*)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n"\s*:\s*"(\d+)"')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_DIMS_RE = re.compile(r"(lhs|rhs)_(contracting|batch)_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# elementwise-ish opcodes whose flops ≈ output numel
+_EW1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "logistic", "floor", "ceil", "round-nearest-even", "sign", "cosine",
+    "sine", "expm1", "log1p", "atan2", "remainder", "compare", "select",
+    "and", "or", "xor", "not", "clamp", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical",
+}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "partition-id", "replica-id",
+    "opt-barrier", "custom-call",
+}
+
+
+def shape_numel_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (numel, bytes) over every array in a (possibly tuple) shape."""
+    numel = 0
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        total += n * _DTYPE_BYTES[dtype]
+    return numel, total
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    shape: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    shapes: Dict[str, str]          # %name -> shape string
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    # TPU-fusion HBM model: only dot/conv operands+outputs and collective
+    # payloads touch HBM; elementwise/reduce chains are VMEM-fused into
+    # their producers (which is how XLA:TPU — and our Pallas kernels with
+    # VMEM scratch — actually execute).  ``bytes`` (raw) upper-bounds,
+    # ``bytes_fused`` approximates the TPU target.
+    bytes_fused: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_wire: float = 0.0          # ring-factored wire bytes per device
+    coll_wire_interpod: float = 0.0
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+        self.coll_wire += other.coll_wire * mult
+        self.coll_wire_interpod += other.coll_wire_interpod * mult
+        self.coll_count += other.coll_count * mult
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):            # computation header
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry_name = cur.name
+                for pname, pshape in _PARAM_RE.findall(m.group(3)):
+                    cur.shapes[pname] = pshape.strip()
+                continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            _, name, shape, opcode, rest = m.groups()
+            cur.ops.append(OpLine(name, shape, opcode, rest))
+            cur.shapes[name] = shape
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _group_geometry(rest: str, n_devices: int) -> Tuple[int, bool]:
+    """(participants per group, spans multiple 256-device pods?)."""
+    m = _GROUPS_RE.search(rest)
+    if m:
+        n_groups, g_size, total = (int(m.group(1)), int(m.group(2)),
+                                   int(m.group(3)))
+        # iota groups [G,S]<=[N]: group members are id, id+G, id+2G, ...
+        # stride G; spans pods iff (S-1)*G >= 256 boundary crossing
+        spans = (g_size - 1) * n_groups >= 256 and total > 256
+        return g_size, spans
+    m = _GROUPS_LIST_RE.search(rest)
+    if m and m.group(1).strip():
+        groups = [g for g in re.findall(r"\{([0-9, ]+)\}", "{" + m.group(1) + "}")]
+        sizes = []
+        spans = False
+        for g in groups:
+            ids = [int(x) for x in g.replace(" ", "").split(",") if x]
+            sizes.append(len(ids))
+            if ids and (max(ids) // 256) != (min(ids) // 256):
+                spans = True
+        return (max(sizes) if sizes else 1), spans
+    return n_devices, n_devices > 256
+
+
+def _dot_flops(op: OpLine, shapes: Dict[str, str]) -> float:
+    out = shape_dims(op.shape)
+    contract = 1
+    m = re.match(r"%([\w.\-]+)", op.rest)
+    dims_attrs = {f"{a}_{b}": v for a, b, v in _DIMS_RE.findall(op.rest)}
+    lhs_c = dims_attrs.get("lhs_contracting", "")
+    if m and m.group(1) in shapes and lhs_c:
+        lhs_dims = shape_dims(shapes[m.group(1)])
+        for idx in lhs_c.split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    numel = 1
+    for d in out:
+        numel *= d
+    return 2.0 * numel * contract
+
+
+def _conv_flops(op: OpLine, shapes: Dict[str, str]) -> float:
+    out_numel, _ = shape_numel_bytes(op.shape)
+    window = 1
+    m = _WINDOW_RE.search(op.rest)
+    if m:
+        for s in m.group(1).split("x"):
+            window *= int(s)
+    fgc = 1
+    m = _FGC_RE.search(op.rest)
+    if m:
+        fgc = int(m.group(1))
+    in_feat = 1
+    ml = _DIMLABELS_RE.search(op.rest)
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    if ml and len(operands) >= 2 and operands[1] in shapes:
+        rhs_labels = ml.group(2)
+        rhs_dims = shape_dims(shapes[operands[1]])
+        if "i" in rhs_labels:
+            i_idx = rhs_labels.index("i")
+            if i_idx < len(rhs_dims):
+                in_feat = rhs_dims[i_idx]
+    return 2.0 * out_numel * window * in_feat
+
+
+# op_name substrings whose f32 is *by design* (explicit casts in the model
+# code — they stay f32 on the TPU target too)
+_F32_BY_DESIGN = ("softmax_xent", "logsumexp", "adamw", "apply_updates")
+
+
+class CostWalker:
+    """``dtype_correction``: XLA:CPU legalizes bf16 dots by upcasting both
+    operands to f32, so on this container every dot — and every collective
+    fed by one — carries f32 payloads that are bf16 on the TPU target.
+    With the flag on (default), f32 dot traffic and f32 collective payloads
+    are counted at 2 bytes/element unless the op is in an intentionally-f32
+    region (loss, optimizer).  FLOP counts are dtype-independent either
+    way.  Both corrected and uncorrected totals are reported."""
+
+    def __init__(self, comps: Dict[str, Computation], n_devices: int,
+                 dtype_correction: bool = True):
+        self.comps = comps
+        self.n_devices = n_devices
+        self.dtype_correction = dtype_correction
+        self._memo: Dict[str, Cost] = {}
+        self.unknown_trip_whiles = 0
+
+    def _dtype_factor(self, op: OpLine) -> float:
+        if not self.dtype_correction:
+            return 1.0
+        if "f32[" not in op.shape:
+            return 1.0
+        meta = re.search(r'op_name="([^"]+)"', op.rest)
+        if meta and any(tag in meta.group(1) for tag in _F32_BY_DESIGN):
+            return 1.0
+        return 0.5
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None:
+            return cost
+        self._memo[name] = cost            # cycle guard (shouldn't happen)
+        for op in comp.ops:
+            cost.add(self.op_cost(op, comp))
+        return cost
+
+    # ------------------------------------------------------------------
+    def op_cost(self, op: OpLine, comp: Computation) -> Cost:
+        c = Cost()
+        opcode = op.opcode
+        if opcode in _FREE:
+            # custom-calls in our modules are metadata (Sharding, etc.)
+            return c
+        _, out_bytes = shape_numel_bytes(op.shape)
+        out_numel, _ = shape_numel_bytes(op.shape)
+
+        if opcode == "while":
+            trip = 1
+            m = _TRIP_RE.search(op.rest)
+            if m:
+                trip = int(m.group(1))
+            else:
+                self.unknown_trip_whiles += 1
+            body = _CALLS_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            if body:
+                c.add(self.computation_cost(body.group(1)), trip)
+            if cond:
+                c.add(self.computation_cost(cond.group(1)), trip)
+            return c
+
+        if opcode in ("fusion", "call", "map"):
+            m = _CALLS_RE.search(op.rest)
+            inner = None
+            if m:
+                inner = self.computation_cost(m.group(1))
+                c.flops += inner.flops
+                c.bytes_fused += inner.bytes_fused
+                for k in COLLECTIVES:
+                    c.coll_bytes[k] += inner.coll_bytes[k]
+                c.coll_wire += inner.coll_wire
+                c.coll_wire_interpod += inner.coll_wire_interpod
+                c.coll_count += inner.coll_count
+            # HBM traffic at fusion boundary: operands + outputs
+            c.bytes += out_bytes + self._operand_bytes(op, comp)
+            return c
+
+        if opcode == "conditional":
+            # count the worst branch
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", op.rest)
+            best = Cost()
+            if branches:
+                for b in branches[0].split(","):
+                    bc = self.computation_cost(b.strip().lstrip("%"))
+                    if bc.flops + bc.bytes > best.flops + best.bytes:
+                        best = bc
+            c.add(best)
+            c.bytes += out_bytes
+            return c
+
+        base = opcode.split("-start")[0]
+        if base in COLLECTIVES:
+            _, payload = shape_numel_bytes(op.shape)
+            payload *= self._dtype_factor(op)
+            g, spans = _group_geometry(op.rest, self.n_devices)
+            ring = (g - 1) / g if g > 1 else 0.0
+            if base == "all-reduce":
+                wire = 2.0 * payload * ring
+            elif base == "reduce-scatter":
+                # output is per-partition (= input/g): wire ≈ in·(g-1)/g
+                wire = payload * (g - 1)
+            elif base == "all-gather":
+                wire = payload * ring
+            elif base == "all-to-all":
+                wire = payload * ring
+            else:                               # collective-permute
+                wire = payload
+            c.coll_bytes[base] += payload
+            c.coll_wire += wire
+            if spans:
+                c.coll_wire_interpod += wire
+            c.coll_count += 1
+            c.bytes += payload + self._operand_bytes(op, comp)
+            c.bytes_fused += payload + self._operand_bytes(op, comp)
+            return c
+        if opcode.endswith("-done") or opcode in ("copy-start", "copy-done",
+                                                  "send", "recv",
+                                                  "send-done", "recv-done"):
+            return c
+
+        if opcode == "dot":
+            f = self._dtype_factor(op)
+            c.flops += _dot_flops(op, comp.shapes)
+            c.bytes += (out_bytes + self._operand_bytes(op, comp)) * f
+            c.bytes_fused += (out_bytes + self._operand_bytes(op, comp)) * f
+            return c
+        if opcode == "convolution":
+            f = self._dtype_factor(op)
+            c.flops += _conv_flops(op, comp.shapes)
+            c.bytes += (out_bytes + self._operand_bytes(op, comp)) * f
+            c.bytes_fused += (out_bytes + self._operand_bytes(op, comp)) * f
+            return c
+        if opcode in ("reduce", "reduce-window"):
+            c.flops += self._operand_numel(op, comp)
+            c.bytes += out_bytes + self._operand_bytes(op, comp)
+            return c
+        if opcode == "dynamic-update-slice":
+            # in-place: traffic = the update operand (2nd arg) + indices
+            ops_ = re.findall(r"%([\w.\-]+)", op.rest)
+            upd = 0
+            if len(ops_) >= 2 and ops_[1] in comp.shapes:
+                _, upd = shape_numel_bytes(comp.shapes[ops_[1]])
+            c.bytes += 2 * upd
+            return c
+        if opcode in _EW1:
+            c.flops += out_numel
+        elif opcode in ("sort",):
+            dims = shape_dims(op.shape)
+            n = dims[-1] if dims else 1
+            import math
+            c.flops += out_numel * max(1, math.log2(max(2, n)))
+        # default data movement
+        c.bytes += out_bytes + self._operand_bytes(op, comp)
+        return c
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, op: OpLine, comp: Computation) -> int:
+        total = 0
+        # operands are the %names before any attribute (rest up to "),")
+        arglist = op.rest.split("), ")[0]
+        for name in re.findall(r"%([\w.\-]+)", arglist):
+            if name in comp.shapes:
+                _, b = shape_numel_bytes(comp.shapes[name])
+                total += b
+        return total
+
+    def _operand_numel(self, op: OpLine, comp: Computation) -> int:
+        total = 0
+        arglist = op.rest.split("), ")[0]
+        for name in re.findall(r"%([\w.\-]+)", arglist):
+            if name in comp.shapes:
+                n, _ = shape_numel_bytes(comp.shapes[name])
+                total += n
+        return total
+
+
+def analyze_hlo(text: str, n_devices: int,
+                dtype_correction: bool = True) -> Dict[str, float]:
+    """Per-device loop-scaled cost of an optimized (post-SPMD) HLO module.
+
+    With ``dtype_correction`` (default) f32 dot/collective traffic is
+    counted at bf16 width (the TPU-target dtype; XLA:CPU upcasts — see
+    CostWalker); the uncorrected totals are reported alongside."""
+    comps = parse_module(text)
+    walker = CostWalker(comps, n_devices, dtype_correction)
+    cost = walker.computation_cost("__entry__")
+    out = {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "bytes_fused_per_device": cost.bytes_fused,
+        "collective_bytes": dict(cost.coll_bytes),
+        "collective_wire_per_device": cost.coll_wire,
+        "collective_wire_interpod": cost.coll_wire_interpod,
+        "collective_count": cost.coll_count,
+        "unknown_trip_whiles": walker.unknown_trip_whiles,
+    }
+    if dtype_correction:
+        raw = CostWalker(comps, n_devices, False).computation_cost(
+            "__entry__")
+        out["uncorrected"] = {
+            "bytes_fused_per_device": raw.bytes_fused,
+            "collective_wire_per_device": raw.coll_wire,
+        }
+    return out

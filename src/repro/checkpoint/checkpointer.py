@@ -1,0 +1,154 @@
+"""Async, atomic, elastic checkpointing.
+
+* **Atomic**: a checkpoint is written to ``step_N.tmp/`` and renamed to
+  ``step_N/`` only when complete — a crash mid-write can never corrupt the
+  restore set (the ``.tmp`` is ignored and GC'd).
+* **Async**: ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a background thread, overlapping the next training steps;
+  ``wait()`` joins before the next save or at shutdown.
+* **Elastic**: leaves are stored whole (gathered), with the tree structure
+  and dtypes in ``manifest.json``.  ``restore`` re-places them under *any*
+  mesh via the shardings the caller provides — restoring a 4-way run onto
+  8 devices (or 1) is just a different sharding argument
+  (tests/test_checkpoint.py exercises device-count changes).
+* **Keep-K GC**: older complete checkpoints beyond ``keep`` are removed
+  after a successful save.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+_SEP = "\x1e"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(jax.tree_util.keystr((k,), simple=True))
+                        for k in path)
+        out[key] = leaf
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host and write in the background."""
+        self.wait()
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+        def write():
+            try:
+                self._write(step, host)
+            except BaseException as e:       # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree) -> None:
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self._write(step, host)
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": {}}
+        for i, (key, arr) in enumerate(sorted(host.items())):
+            fname = f"leaf_{i:05d}.npy"
+            store = arr
+            if arr.dtype.kind not in "fiub?" or str(arr.dtype) == "bfloat16":
+                # ml_dtypes (bf16/fp8, numpy kind 'V') don't np.load back
+                # cleanly — store as f32 (lossless for these widths)
+                store = arr.astype(np.float32)
+            np.save(tmp / fname, store)
+            manifest["leaves"][key] = {
+                "file": fname, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                      # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        done = self.complete_steps()
+        for s in done[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+        for tmp in self.dir.glob("*.tmp"):
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def complete_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            steps.append(int(p.name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.complete_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: matching tree of Shardings (or
+        None → replicated default device placement)."""
+        path = self.dir / f"step_{step:010d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        flat_like = _flatten(like)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out: Dict[str, Any] = {}
+        for key, meta in manifest["leaves"].items():
+            if key not in flat_like:
+                continue                      # dropped leaf (fwd compat)
+            arr = np.load(path / meta["file"])
+            want = flat_like[key]
+            if tuple(arr.shape) != tuple(want.shape):
+                raise ValueError(
+                    f"leaf {key!r}: checkpoint shape {arr.shape} != "
+                    f"expected {want.shape}")
+            cast = jax.numpy.asarray(arr).astype(want.dtype)
+            sh = flat_shard.get(key)
+            out[key] = jax.device_put(cast, sh) if sh is not None else cast
+        missing = set(flat_like) - set(out)
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+        # unflatten by matching the like-tree's flatten order
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for pth, _ in flat:
+            key = _SEP.join(str(jax.tree_util.keystr((k,), simple=True))
+                            for k in pth)
+            leaves.append(out[key])
+        return jax.tree_util.tree_unflatten(treedef, leaves)

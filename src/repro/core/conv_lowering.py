@@ -1,0 +1,168 @@
+"""Tensor → matrix lowering: im2row / ker2col / mat2tensor (paper §4.1, Def. 3).
+
+Conventions (NCHW, batch = 1 as in the paper's experiments):
+
+* ``im2row``  — input tensor ``(1, C, H, W)`` with a ``kh×kw`` kernel and
+  stride ``s`` becomes the ``(H'·W') × (C·kh·kw)`` input matrix ``A``; one
+  row per output spatial position (row-major over (i, j)), patch elements
+  channel-major then kernel-row then kernel-col — matching ``ker2col``.
+* ``ker2col`` — weight tensor ``(F, C, kh, kw)`` becomes the
+  ``(C·kh·kw) × F`` weight matrix ``B`` (filter ``f`` in column ``f``).
+* ``mat2tensor`` — output matrix ``(H'·W') × F`` back to ``(1, F, H', W')``.
+
+``T_C = mat2tensor(im2row(T_A) × ker2col(T_B))`` (Def. 3) is asserted by
+property tests against a direct convolution oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """Spatial geometry of one convolution (valid padding)."""
+
+    in_channels: int
+    in_h: int
+    in_w: int
+    kh: int
+    kw: int
+    stride: int = 1
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h - self.kh) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w - self.kw) // self.stride + 1
+
+    @property
+    def patch_len(self) -> int:
+        return self.in_channels * self.kh * self.kw
+
+    @property
+    def n_positions(self) -> int:
+        return self.out_h * self.out_w
+
+
+def im2row(tensor: np.ndarray, kh: int, kw: int, stride: int = 1) -> np.ndarray:
+    """Input tensor ``(1, C, H, W)`` → input matrix ``(H'·W', C·kh·kw)``."""
+    if tensor.ndim != 4 or tensor.shape[0] != 1:
+        raise ValueError(f"expected (1, C, H, W) tensor, got {tensor.shape}")
+    _, c, h, w = tensor.shape
+    geo = ConvGeometry(c, h, w, kh, kw, stride)
+    oh, ow = geo.out_h, geo.out_w
+    if oh <= 0 or ow <= 0:
+        raise ValueError("kernel larger than input")
+    x = tensor[0]
+    # Gather patches: rows ordered (i, j) row-major; patch channel-major.
+    out = np.empty((oh * ow, geo.patch_len), dtype=tensor.dtype)
+    r = 0
+    for i in range(oh):
+        for j in range(ow):
+            patch = x[:, i * stride:i * stride + kh, j * stride:j * stride + kw]
+            out[r] = patch.reshape(-1)
+            r += 1
+    return out
+
+
+def ker2col(weights: np.ndarray) -> np.ndarray:
+    """Weight tensor ``(F, C, kh, kw)`` → weight matrix ``(C·kh·kw, F)``."""
+    if weights.ndim != 4:
+        raise ValueError(f"expected (F, C, kh, kw) tensor, got {weights.shape}")
+    f = weights.shape[0]
+    return np.ascontiguousarray(weights.reshape(f, -1).T)
+
+
+def mat2tensor(mat: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
+    """Output matrix ``(H'·W', F)`` → output tensor ``(1, F, H', W')``."""
+    if mat.ndim != 2 or mat.shape[0] != out_h * out_w:
+        raise ValueError(
+            f"matrix {mat.shape} incompatible with {out_h}×{out_w} output")
+    f = mat.shape[1]
+    return np.ascontiguousarray(
+        mat.reshape(out_h, out_w, f).transpose(2, 0, 1)[None])
+
+
+def tensor2mat(tensor: np.ndarray) -> np.ndarray:
+    """Inverse of ``mat2tensor`` — ``(1, F, H, W)`` → ``(H·W, F)``.
+
+    This is the host-side reshaping entry point when the *next* layer is
+    fully connected on a 1×1 spatial map, or when re-running ``im2row``.
+    """
+    if tensor.ndim != 4 or tensor.shape[0] != 1:
+        raise ValueError(f"expected (1, F, H, W) tensor, got {tensor.shape}")
+    _, f, h, w = tensor.shape
+    return np.ascontiguousarray(tensor[0].transpose(1, 2, 0).reshape(h * w, f))
+
+
+def flatten_tensor(tensor: np.ndarray) -> np.ndarray:
+    """Tensor ``(1, C, H, W)`` → FC input row ``(1, C·H·W)`` (NCHW order) —
+    the conv→FC transition of §4.3 ("thanks to the fully-connected
+    layers")."""
+    return np.ascontiguousarray(tensor.reshape(1, -1))
+
+
+def conv2d_reference(tensor: np.ndarray, weights: np.ndarray,
+                     stride: int = 1) -> np.ndarray:
+    """Direct int64 convolution oracle for Def.-3 property tests."""
+    _, c, h, w = tensor.shape
+    f, cw, kh, kw = weights.shape
+    assert c == cw, (c, cw)
+    geo = ConvGeometry(c, h, w, kh, kw, stride)
+    out = np.zeros((1, f, geo.out_h, geo.out_w), dtype=np.int64)
+    x = tensor[0].astype(np.int64)
+    wt = weights.astype(np.int64)
+    for i in range(geo.out_h):
+        for j in range(geo.out_w):
+            patch = x[:, i * stride:i * stride + kh, j * stride:j * stride + kw]
+            out[0, :, i, j] = (patch[None] * wt).sum(axis=(1, 2, 3))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pooling index plans (region-based non-linear op, §4.1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolPlan:
+    """Average-pool 2×2/stride-2 as a VTA ALU program over ACC vectors.
+
+    The conv-output matrix has one ACC vector per spatial position (β = 1
+    block column for every LeNet layer; for β > 1 the indices scale by the
+    block geometry — handled by the layer compiler).  Pooling accumulates
+    the 4 window members into the *first* member's vector (3 ADD pairs),
+    then divides by 4 with one SHR-2 (exact for the sum of four int32s in
+    range).  ``keep_rows`` lists the surviving matrix rows, in pooled
+    row-major order — the host-side decode extracts exactly these rows
+    (which is how the paper's layer-1 output is "decoded into a 196×6
+    matrix").
+    """
+
+    add_pairs: Tuple[Tuple[int, int], ...]
+    shr_indices: Tuple[int, ...]
+    keep_rows: Tuple[int, ...]
+    out_h: int
+    out_w: int
+
+
+def avgpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
+    if in_h % 2 or in_w % 2:
+        raise ValueError("avgpool2x2 requires even spatial dims")
+    oh, ow = in_h // 2, in_w // 2
+    pairs = []
+    keep = []
+    for i in range(oh):
+        for j in range(ow):
+            base = (2 * i) * in_w + (2 * j)
+            members = (base, base + 1, base + in_w, base + in_w + 1)
+            for src in members[1:]:
+                pairs.append((base, src))
+            keep.append(base)
+    return PoolPlan(add_pairs=tuple(pairs), shr_indices=tuple(keep),
+                    keep_rows=tuple(keep), out_h=oh, out_w=ow)

@@ -1,0 +1,128 @@
+"""Analytical Compute-module cycle model (paper §5.2).
+
+The paper's cycle-accurate CHISEL simulation of LeNet-5 reports:
+
+* 2972 cycles for the TensorGemm operations — i.e. 2942 GeMM loops plus
+  instruction decode / buffer-availability checking overhead ("the VTA is
+  able to almost complete an entire GeMM loop in each cycle");
+* 6358 total Compute-module cycles (GEMM + ALU, without Load/Store);
+* 9.8 µs at 650 MHz.
+
+We model the Compute module as: 1 cycle per GeMM/ALU loop iteration +
+``DECODE_CYCLES`` fixed cycles per compute instruction (decode + dependency
+check + buffer availability).  ``DECODE_CYCLES`` is the single calibration
+constant; the paper's own numbers pin it:
+
+    2972 = 2942 loops + overhead; our compiler emits exactly 5 non-reset
+    GeMM instructions for LeNet-5 (one per layer — every layer fits the
+    SRAM in a single chunk)  →  30 / 5  →  DECODE_CYCLES = 6.
+
+The 6358-cycle total additionally depends on the TVM-generated ALU
+instruction stream, which the paper does not publish.  Our ALU schedule is
+*leaner* (pool ÷4 and requant fuse into a single SHR on the surviving rows
+only), so our total comes out below 6358 — the delta is reported as a
+beyond-paper instruction-schedule optimisation in EXPERIMENTS.md §Paper.
+
+The SIMD-CPU comparison (§5.2) follows the paper's own arithmetic: one GeMM
+loop is ``block_size² = 256`` MACs, a 16-MAC/cycle CPU therefore needs 16×
+the cycles per loop — 2972 × 16 = 47552 ("at least 47552 total cycles"),
+and matching the VTA wall-time needs a ≈ 16 × 650 MHz ≈ 10 GHz clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+from . import isa
+from .hwconfig import VTAConfig
+from .program import VTAProgram
+
+# Calibrated on the paper's published LeNet-5 measurement (see module doc).
+DECODE_CYCLES = 6
+
+# §5.2 hardware constants.
+FPGA_CLOCK_HZ = 650e6
+SIMD_MACS_PER_CYCLE = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleReport:
+    gemm_loops: int
+    gemm_insns: int
+    alu_loops: int
+    alu_insns: int
+    reset_loops: int
+    reset_insns: int
+
+    @property
+    def tensor_gemm_cycles(self) -> int:
+        """Cycles to execute the (non-reset) TensorGemm instructions,
+        including decode + buffer checks (paper: 2972 for LeNet-5)."""
+        return self.gemm_loops + DECODE_CYCLES * self.gemm_insns
+
+    @property
+    def tensor_alu_cycles(self) -> int:
+        return self.alu_loops + DECODE_CYCLES * self.alu_insns
+
+    @property
+    def reset_cycles(self) -> int:
+        return self.reset_loops + DECODE_CYCLES * self.reset_insns
+
+    @property
+    def total_compute_cycles(self) -> int:
+        """Total Compute-module cycles (paper: 6358 for LeNet-5; excludes
+        Load/Store as in §5.2)."""
+        return (self.tensor_gemm_cycles + self.tensor_alu_cycles
+                + self.reset_cycles)
+
+    def execution_time_s(self, clock_hz: float = FPGA_CLOCK_HZ) -> float:
+        return self.total_compute_cycles / clock_hz
+
+    def simd_cpu_cycles(self, block_size: int,
+                        macs_per_cycle: int = SIMD_MACS_PER_CYCLE) -> int:
+        """§5.2 comparison, the paper's arithmetic: a SIMD CPU needs
+        ``block_size²/macs_per_cycle`` × the VTA's TensorGemm cycles
+        (2972 × 16 = 47552 for LeNet-5)."""
+        per_loop = block_size * block_size // macs_per_cycle
+        return self.tensor_gemm_cycles * per_loop
+
+    def equivalent_cpu_clock_hz(self, clock_hz: float = FPGA_CLOCK_HZ,
+                                block_size: int = 16,
+                                macs_per_cycle: int = SIMD_MACS_PER_CYCLE
+                                ) -> float:
+        """Clock a 16-MAC SIMD CPU would need to match the VTA wall-time
+        (paper: ≈10 GHz — 16× the 650 MHz FPGA clock)."""
+        per_loop = block_size * block_size // macs_per_cycle
+        cpu_total = self.total_compute_cycles * per_loop
+        return cpu_total / self.execution_time_s(clock_hz)
+
+
+def analyze(instructions: Iterable[object]) -> CycleReport:
+    gemm_loops = gemm_insns = alu_loops = alu_insns = 0
+    reset_loops = reset_insns = 0
+    for i in instructions:
+        if isinstance(i, isa.GemInsn):
+            if i.reset:
+                reset_loops += i.loop_count
+                reset_insns += 1
+            else:
+                gemm_loops += i.loop_count
+                gemm_insns += 1
+        elif isinstance(i, isa.AluInsn):
+            alu_loops += i.loop_count
+            alu_insns += 1
+    return CycleReport(gemm_loops=gemm_loops, gemm_insns=gemm_insns,
+                       alu_loops=alu_loops, alu_insns=alu_insns,
+                       reset_loops=reset_loops, reset_insns=reset_insns)
+
+
+def analyze_program(prog: VTAProgram) -> CycleReport:
+    return analyze(prog.instructions)
+
+
+def analyze_programs(progs: List[VTAProgram]) -> CycleReport:
+    insns: List[object] = []
+    for p in progs:
+        insns.extend(p.instructions)
+    return analyze(insns)

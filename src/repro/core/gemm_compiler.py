@@ -1,0 +1,476 @@
+"""Operations definition: matrix op → VTA instructions + UOPs (paper §3.3).
+
+``compile_matmul`` lowers ``C = A × B + X`` followed by element-wise ALU
+post-ops down to a :class:`~repro.core.program.VTAProgram`:
+
+* data definition (pad → split → binarise) per §3.2;
+* DRAM allocation in the TVM reference order (INP, WGT, [ACC], OUT, UOP,
+  INSN), each region on a fresh 4 KiB page (§2.2);
+* the blocked-GEMM schedule of Fig. 7/8: ``LP_OUT = λ``,
+  ``LP_IN = row_height``, one UOP per output block
+  ``(ACC_IDX, INP_IDX, WGT_IDX) = ((i·β+j)·rh, (i·λ)·rh, j)``;
+* buffer-capacity chunking (§3.3: "If the data do not fit into the buffers,
+  steps 2 to 5 must be repeated");
+* dependency flags wiring the Load/Compute/Store queues (§2.3), validated by
+  the simulator's token checker.
+
+The §5.1 "GeMM loop" metric falls out of the generated ``iter_out × iter_in
+× n_uop`` products — LeNet-5 totals 2942 by construction (see
+``tests/test_lenet_e2e.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import isa
+from .dram import DramAllocator
+from .hwconfig import VTAConfig, vta_default
+from .layout import (matrix_padding, matrix_splitting, binarize_blocks,
+                     should_pad_height, pad_to_multiple)
+from .program import OutputMeta, VTAProgram
+
+
+# ---------------------------------------------------------------------------
+# ALU post-op specification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AluImmOp:
+    """Element-wise op with an immediate, applied to every result vector.
+
+    ``relu``  → MAX(x, 0); ``shr`` → arithmetic shift right (requant);
+    ``add``/``min``/``max`` with an immediate.
+    """
+
+    op: isa.AluOp
+    imm: int = 0
+
+    @staticmethod
+    def relu() -> "AluImmOp":
+        return AluImmOp(isa.AluOp.MAX, 0)
+
+    @staticmethod
+    def shr(shift: int) -> "AluImmOp":
+        return AluImmOp(isa.AluOp.SHR, shift)
+
+
+@dataclasses.dataclass(frozen=True)
+class AluPairOp:
+    """Vector-pair op ``acc[dst] = op(acc[dst], acc[src])`` over an explicit
+    (dst, src) list — used for region ops such as average pooling (ADD
+    pairs followed by an ``AluIndexedImmOp`` SHR).  Indices are global
+    result-vector indices (block-major).  Only valid when the whole result
+    fits in one SRAM chunk."""
+
+    op: isa.AluOp
+    pairs: Tuple[Tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AluIndexedImmOp:
+    """Immediate op applied to an explicit list of result-vector indices."""
+
+    op: isa.AluOp
+    imm: int
+    indices: Tuple[int, ...]
+
+
+AluSpec = (AluImmOp, AluPairOp, AluIndexedImmOp)
+
+
+# ---------------------------------------------------------------------------
+# Chunk geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """How the α×λ×β block grid is tiled to fit the SRAM buffers."""
+
+    alpha: int
+    lam: int
+    beta: int
+    alpha_c: int
+    lam_c: int
+    beta_c: int
+    row_height: int
+
+    @property
+    def n_chunks(self) -> int:
+        ceil = lambda a, b: -(-a // b)
+        return ceil(self.alpha, self.alpha_c) * ceil(self.beta, self.beta_c)
+
+    @property
+    def single_chunk(self) -> bool:
+        return (self.alpha_c, self.lam_c, self.beta_c) == (
+            self.alpha, self.lam, self.beta)
+
+
+def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
+                row_height: int) -> ChunkPlan:
+    """Greedy deterministic tiling honouring every buffer capacity."""
+    lam_c = max(1, min(lam, cfg.wgt_buff_matrices,
+                       cfg.inp_buff_vectors // row_height))
+    beta_c = max(1, min(beta, cfg.wgt_buff_matrices // lam_c,
+                        cfg.acc_buff_vectors // row_height,
+                        cfg.out_buff_vectors // row_height,
+                        cfg.uop_buff_entries - 1))
+    alpha_c = max(1, min(alpha,
+                         cfg.inp_buff_vectors // (row_height * lam_c),
+                         cfg.acc_buff_vectors // (row_height * beta_c),
+                         cfg.out_buff_vectors // (row_height * beta_c),
+                         (cfg.uop_buff_entries - 1) // beta_c))
+    plan = ChunkPlan(alpha, lam, beta, alpha_c, lam_c, beta_c, row_height)
+    _validate_plan(cfg, plan)
+    return plan
+
+
+def _validate_plan(cfg: VTAConfig, p: ChunkPlan) -> None:
+    assert p.alpha_c * p.row_height * p.lam_c <= cfg.inp_buff_vectors
+    assert p.lam_c * p.beta_c <= cfg.wgt_buff_matrices
+    assert p.alpha_c * p.row_height * p.beta_c <= cfg.acc_buff_vectors
+    assert p.alpha_c * p.row_height * p.beta_c <= cfg.out_buff_vectors
+    assert p.alpha_c * p.beta_c + 1 <= cfg.uop_buff_entries
+
+
+def _ranges(total: int, chunk: int):
+    for start in range(0, total, chunk):
+        yield start, min(chunk, total - start)
+
+
+# ---------------------------------------------------------------------------
+# Reference semantics (the pure-numpy oracle for expected_out.bin)
+# ---------------------------------------------------------------------------
+
+def reference_result(A: np.ndarray, B: np.ndarray, X: Optional[np.ndarray],
+                     alu_ops: Sequence, cfg: VTAConfig,
+                     row_height: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Bit-accurate reference: returns ``(acc_int32, out_int8)`` on the
+    *padded* geometry (block-major semantics are layout-only)."""
+    bs = cfg.block_size
+    if row_height is None:
+        row_height = bs if should_pad_height(A) else 1
+    Ap = matrix_padding(A, bs, pad_height=row_height > 1).astype(np.int32)
+    Bp = matrix_padding(B, bs, pad_height=True).astype(np.int32)
+    acc = Ap @ Bp   # int32 with wraparound handled by numpy int32 ops below
+    acc = acc.astype(np.int64)
+    if X is not None:
+        Xp = np.zeros(acc.shape, dtype=np.int64)
+        Xp[:X.shape[0], :X.shape[1]] = X.astype(np.int64)
+        acc = acc + Xp
+    acc = _wrap_int32(acc)
+
+    beta = Bp.shape[1] // bs
+    vec = _matrix_to_vectors(acc, bs, row_height)   # (n_vec, bs) block-major
+    for spec in alu_ops:
+        if isinstance(spec, AluImmOp):
+            vec = _alu_apply(vec, spec.op, spec.imm, np.arange(len(vec)))
+        elif isinstance(spec, AluIndexedImmOp):
+            vec = _alu_apply(vec, spec.op, spec.imm, np.asarray(spec.indices))
+        elif isinstance(spec, AluPairOp):
+            for dst, src in spec.pairs:
+                vec = _alu_pair(vec, spec.op, dst, src)
+        else:
+            raise TypeError(spec)
+    acc = _vectors_to_matrix(vec, acc.shape, bs, row_height)
+    out = (acc.astype(np.int64) & 0xFF).astype(np.uint8).view(np.int8) \
+        .astype(np.int8)   # truncation (§2.1: OUT = truncated ACC)
+    return acc.astype(np.int32), out
+
+
+def _wrap_int32(x: np.ndarray) -> np.ndarray:
+    return ((x.astype(np.int64) + 2**31) % 2**32 - 2**31).astype(np.int32)
+
+
+def _alu_apply(vec, op, imm, idx):
+    vec = vec.copy()
+    sel = vec[idx].astype(np.int64)
+    if op == isa.AluOp.MIN:
+        sel = np.minimum(sel, imm)
+    elif op == isa.AluOp.MAX:
+        sel = np.maximum(sel, imm)
+    elif op == isa.AluOp.ADD:
+        sel = sel + imm
+    elif op == isa.AluOp.SHR:
+        sel = sel >> imm
+    vec[idx] = _wrap_int32(sel)
+    return vec
+
+
+def _alu_pair(vec, op, dst, src):
+    vec = vec.copy()
+    a = vec[dst].astype(np.int64)
+    b = vec[src].astype(np.int64)
+    if op == isa.AluOp.MIN:
+        r = np.minimum(a, b)
+    elif op == isa.AluOp.MAX:
+        r = np.maximum(a, b)
+    elif op == isa.AluOp.ADD:
+        r = a + b
+    elif op == isa.AluOp.SHR:
+        r = a >> (b & 31)
+    vec[dst] = _wrap_int32(r)
+    return vec
+
+
+def _matrix_to_vectors(mat: np.ndarray, bs: int, row_height: int) -> np.ndarray:
+    """(H, W) → (n_vec, bs) in block-major vector order (DRAM/SRAM order)."""
+    h, w = mat.shape
+    br, bc = h // row_height, w // bs
+    blocks = mat.reshape(br, row_height, bc, bs).transpose(0, 2, 1, 3)
+    return blocks.reshape(br * bc * row_height, bs)
+
+
+def _vectors_to_matrix(vec: np.ndarray, shape, bs: int, row_height: int) -> np.ndarray:
+    h, w = shape
+    br, bc = h // row_height, w // bs
+    blocks = vec.reshape(br, bc, row_height, bs).transpose(0, 2, 1, 3)
+    return blocks.reshape(h, w)
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+
+def compile_matmul(A: np.ndarray, B: np.ndarray, *,
+                   X: Optional[np.ndarray] = None,
+                   bias: Optional[np.ndarray] = None,
+                   alu_ops: Sequence = (),
+                   cfg: Optional[VTAConfig] = None,
+                   name: str = "matmul",
+                   dram_offset: int = 0,
+                   allocator: Optional[DramAllocator] = None) -> VTAProgram:
+    """Compile ``C = A·B (+X|+bias)`` + element-wise post-ops to a VTA program.
+
+    ``A`` int8 (M,K); ``B`` int8 (K,N); ``X`` int32 (M,N) accumulator preload
+    or ``bias`` int32 (N,) broadcast over rows (the paper's C = A×B + X form,
+    §2.3).  ``alu_ops`` is an ordered list of AluImmOp / AluPairOp /
+    AluIndexedImmOp.
+
+    ``allocator`` — pass a shared :class:`DramAllocator` to place several
+    programs (network layers, §4.2) in one DRAM region; region names are
+    then prefixed with ``name``.
+    """
+    cfg = cfg or vta_default()
+    bs = cfg.block_size
+    if A.ndim != 2 or B.ndim != 2 or A.shape[1] != B.shape[0]:
+        raise ValueError(f"incompatible shapes {A.shape} @ {B.shape}")
+    A = np.asarray(A, dtype=np.int8)
+    B = np.asarray(B, dtype=np.int8)
+    if bias is not None and X is not None:
+        raise ValueError("pass either X or bias, not both")
+    M, K = A.shape
+    N = B.shape[1]
+    if bias is not None:
+        X = np.broadcast_to(np.asarray(bias, dtype=np.int32), (M, N)).copy()
+
+    # ---------------- data definition (§3.2) ----------------
+    pad_h = should_pad_height(A)
+    row_height = bs if pad_h else A.shape[0]
+    Ap = matrix_padding(A, bs, pad_height=pad_h)
+    Bp = matrix_padding(B, bs, pad_height=True)
+    a_split = matrix_splitting(Ap, bs)
+    b_split = matrix_splitting(Bp, bs)
+    alpha, lam = a_split.block_rows, a_split.block_cols
+    beta = b_split.block_cols
+    assert b_split.block_rows == lam, "K-padding mismatch"
+
+    inp_bin = binarize_blocks(a_split, cfg.inp_dtype)
+    wgt_bin = binarize_blocks(b_split, cfg.wgt_dtype, transpose=True)
+
+    has_x = X is not None
+    if has_x:
+        Xp = np.zeros((alpha * row_height, beta * bs), dtype=np.int32)
+        Xp[:M, :N] = X.astype(np.int32)
+        x_split = matrix_splitting(Xp, bs)
+        acc_bin = binarize_blocks(x_split, cfg.acc_dtype)
+
+    # ---------------- chunk plan ----------------
+    plan = plan_chunks(cfg, alpha, lam, beta, row_height)
+    for spec in alu_ops:
+        if isinstance(spec, (AluPairOp, AluIndexedImmOp)) and not plan.single_chunk:
+            raise NotImplementedError(
+                "indexed/pair ALU programs require a single-chunk result")
+
+    # ---------------- UOPs ----------------
+    uops: List[isa.Uop] = [isa.Uop(0, 0, 0)]     # uop@0: reset / simple ALU
+    gemm_uop_start: Dict[Tuple[int, int, int], int] = {}
+
+    def uop_block(a_c: int, b_c: int, l_c: int) -> int:
+        key = (a_c, b_c, l_c)
+        if key not in gemm_uop_start:
+            start = len(uops)
+            for i in range(a_c):
+                for j in range(b_c):
+                    uops.append(isa.Uop(acc_idx=(i * b_c + j) * row_height,
+                                        inp_idx=i * l_c * row_height,
+                                        wgt_idx=j))
+            gemm_uop_start[key] = start
+        return gemm_uop_start[key]
+
+    # Pre-generate GEMM uops for every chunk shape (so the region size is
+    # known before allocation).
+    chunk_shapes = []
+    for _, a_c in _ranges(alpha, plan.alpha_c):
+        for _, b_c in _ranges(beta, plan.beta_c):
+            for _, l_c in _ranges(lam, plan.lam_c):
+                chunk_shapes.append((a_c, b_c, l_c))
+                uop_block(a_c, b_c, l_c)
+
+    # ALU uop lists (indexed ops / pair programs)
+    alu_uop_start: List[Optional[int]] = []
+    for spec in alu_ops:
+        if isinstance(spec, AluImmOp):
+            alu_uop_start.append(None)           # reuses uop@0
+        elif isinstance(spec, AluIndexedImmOp):
+            alu_uop_start.append(len(uops))
+            for idx in spec.indices:
+                uops.append(isa.Uop(acc_idx=idx, inp_idx=idx, wgt_idx=0))
+        elif isinstance(spec, AluPairOp):
+            alu_uop_start.append(len(uops))
+            for dst, src in spec.pairs:
+                uops.append(isa.Uop(acc_idx=dst, inp_idx=src, wgt_idx=0))
+    if len(uops) > cfg.uop_buff_entries:
+        raise NotImplementedError(
+            f"{len(uops)} uops exceed the {cfg.uop_buff_entries}-entry buffer")
+
+    # ---------------- DRAM allocation (§2.2, order per §3.4) ----------------
+    alloc = allocator if allocator is not None else DramAllocator(
+        offset=dram_offset, page_bytes=cfg.page_bytes)
+    pfx = f"{name}:" if allocator is not None else ""
+    n_inp_vec = alpha * lam * row_height
+    n_wgt_mat = lam * beta
+    n_res_vec = alpha * beta * row_height
+    regions = {
+        "inp": alloc.alloc(pfx + "inp", "inp", cfg.inp_elem_bytes, n_inp_vec),
+        "wgt": alloc.alloc(pfx + "wgt", "wgt", cfg.wgt_elem_bytes, n_wgt_mat),
+    }
+    if has_x:
+        regions["acc"] = alloc.alloc(pfx + "acc", "acc", cfg.acc_elem_bytes,
+                                     n_res_vec)
+    regions["out"] = alloc.alloc(pfx + "out", "out", cfg.out_elem_bytes,
+                                 n_res_vec)
+    regions["uop"] = alloc.alloc(pfx + "uop", "uop", cfg.uop_elem_bytes,
+                                 len(uops))
+
+    prog = VTAProgram(config=cfg, allocator=alloc, uops=uops, name=name,
+                      regions=regions)
+    prog.set_segment("inp", inp_bin)
+    prog.set_segment("wgt", wgt_bin)
+    if has_x:
+        prog.set_segment("acc", acc_bin)
+
+    log = lambda r: regions[r].logical_addr(alloc.offset)
+    insns: List[object] = []
+
+    # -- program preamble: load UOPs, reset pair (§3.3 steps 1) --
+    insns.append(isa.MemInsn(isa.Opcode.LOAD, isa.MemId.UOP, sram_base=0,
+                             dram_base=log("uop"), y_size=1,
+                             x_size=len(uops), x_stride=len(uops)))
+    insns.append(isa.GemInsn(reset=1, uop_bgn=0, uop_end=1,
+                             iter_out=1, iter_in=1))
+
+    # -- chunk loop (§3.3 steps 2–5) --
+    load_groups = 0
+    stores = 0
+    for i0, a_c in _ranges(alpha, plan.alpha_c):
+        for j0, b_c in _ranges(beta, plan.beta_c):
+            first_gemm_of_chunk = True
+            if has_x:
+                # ACC preload (compute-module LOAD): chunk rows are strided
+                # runs of b_c·rh vectors out of the β·rh-wide block rows.
+                insns.append(isa.MemInsn(
+                    isa.Opcode.LOAD, isa.MemId.ACC, sram_base=0,
+                    dram_base=log("acc") + (i0 * beta + j0) * row_height,
+                    y_size=a_c, x_size=b_c * row_height,
+                    x_stride=beta * row_height))
+            for k0, l_c in _ranges(lam, plan.lam_c):
+                li = isa.MemInsn(
+                    isa.Opcode.LOAD, isa.MemId.INP, sram_base=0,
+                    dram_base=log("inp") + (i0 * lam + k0) * row_height,
+                    y_size=a_c, x_size=l_c * row_height,
+                    x_stride=lam * row_height)
+                if load_groups > 0:
+                    li.dep.pop_next = 1          # wait for compute buffer release
+                lw = isa.MemInsn(
+                    isa.Opcode.LOAD, isa.MemId.WGT, sram_base=0,
+                    dram_base=log("wgt") + k0 * beta + j0,
+                    y_size=l_c, x_size=b_c, x_stride=beta)
+                lw.dep.push_next = 1             # load group complete
+                insns.extend([li, lw])
+                load_groups += 1
+
+                if not has_x and k0 == 0:
+                    # no X preload: zero the chunk accumulator
+                    rg = isa.GemInsn(
+                        reset=1, uop_bgn=0, uop_end=1,
+                        iter_out=a_c * b_c, iter_in=row_height,
+                        acc_factor_out=row_height, acc_factor_in=1)
+                    if first_gemm_of_chunk and stores > 0:
+                        rg.dep.pop_next = 1      # wait for previous store
+                        first_gemm_of_chunk = False
+                    insns.append(rg)
+                start = uop_block(a_c, b_c, l_c)
+                g = isa.GemInsn(
+                    uop_bgn=start, uop_end=start + a_c * b_c,
+                    iter_out=l_c, iter_in=row_height,
+                    acc_factor_out=0, acc_factor_in=1,
+                    inp_factor_out=row_height, inp_factor_in=1,
+                    wgt_factor_out=b_c, wgt_factor_in=0)
+                g.dep.pop_prev = 1               # consume load group
+                g.dep.push_prev = 1              # release INP/WGT buffers
+                if first_gemm_of_chunk and stores > 0:
+                    g.dep.pop_next = 1           # wait for previous store
+                first_gemm_of_chunk = False
+                insns.append(g)
+
+            n_vec_chunk = a_c * b_c * row_height
+            for spec, ustart in zip(alu_ops, alu_uop_start):
+                if isinstance(spec, AluImmOp):
+                    insns.append(isa.AluInsn(
+                        alu_opcode=spec.op, uop_bgn=0, uop_end=1,
+                        iter_out=a_c * b_c, iter_in=row_height,
+                        dst_factor_out=row_height, dst_factor_in=1,
+                        src_factor_out=row_height, src_factor_in=1,
+                        use_imm=1, imm=spec.imm))
+                elif isinstance(spec, AluIndexedImmOp):
+                    insns.append(isa.AluInsn(
+                        alu_opcode=spec.op, uop_bgn=ustart,
+                        uop_end=ustart + len(spec.indices),
+                        iter_out=1, iter_in=1, use_imm=1, imm=spec.imm))
+                elif isinstance(spec, AluPairOp):
+                    insns.append(isa.AluInsn(
+                        alu_opcode=spec.op, uop_bgn=ustart,
+                        uop_end=ustart + len(spec.pairs),
+                        iter_out=1, iter_in=1, use_imm=0))
+            insns[-1].dep.push_next = 1          # result ready for store
+
+            st = isa.MemInsn(
+                isa.Opcode.STORE, isa.MemId.OUT, sram_base=0,
+                dram_base=log("out") + (i0 * beta + j0) * row_height,
+                y_size=a_c, x_size=b_c * row_height,
+                x_stride=beta * row_height)
+            st.dep.pop_prev = 1
+            st.dep.push_prev = 1
+            insns.append(st)
+            stores += 1
+
+    fin = isa.FinishInsn()
+    fin.dep.pop_next = 1                         # last store completed
+    insns.append(fin)
+
+    prog.instructions = insns
+
+    # ---------------- expected output (oracle) ----------------
+    acc_ref, out_ref = reference_result(A, B, X, alu_ops, cfg,
+                                        row_height=row_height)
+    prog.expected_out = out_ref
+    prog.output_meta = OutputMeta(block_rows=alpha, block_cols=beta,
+                                  row_height=row_height,
+                                  valid_shape=(M, N))
+    prog.finalize()
+    return prog

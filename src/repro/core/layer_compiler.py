@@ -1,0 +1,229 @@
+"""One CNN layer → one VTA program (paper §4.2, Fig. 11).
+
+A *layer* (paper §4.1) = one dense linear operation (convolution or fully
+connected) + subsequent non-linear operations (ReLU on TensorAlu; average
+pooling as an ALU ADD/SHR program; static power-of-2 requantisation).
+
+The lowering is the extended pipeline of Fig. 11:
+
+    tensor ──im2row/ker2col──▶ matrices ──pad/split/binarise──▶ data
+    layer op ────────────────▶ GEMM + ALU instructions + UOPs
+
+Requantisation discipline (hardware adaptation, DESIGN.md §2): the VTA OUT
+path truncates ACC (int32) to int8, so every layer ends with an arithmetic
+right shift that brings the live values into [-128, 127].  Shifts are
+*static* — chosen at compile time from the reference activations — which is
+precisely the predictable-execution property the paper targets.  For pooled
+layers, the pool's ÷4 and the requant shift fuse into one SHR (2 + shift)
+over the surviving rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .conv_lowering import (ConvGeometry, PoolPlan, avgpool2x2_plan,
+                            flatten_tensor, im2row, ker2col, mat2tensor)
+from .dram import DramAllocator
+from .gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
+                            compile_matmul)
+from .hwconfig import VTAConfig, vta_default
+from .layout import pad_to_multiple, should_pad_height
+from .program import VTAProgram
+from . import isa
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Hardware-agnostic description of one layer.
+
+    conv: ``weights`` is ``(F, C, kh, kw)`` int8; input is a ``(1, C, H, W)``
+    int8 tensor.  fc: ``weights`` is ``(D, F)`` int8; input is a ``(1, D)``
+    int8 matrix (or a tensor, flattened NCHW).
+    """
+
+    name: str
+    kind: str                      # "conv" | "fc"
+    weights: np.ndarray
+    bias: Optional[np.ndarray] = None     # int32 (F,)
+    stride: int = 1
+    relu: bool = False
+    pool: Optional[str] = None     # None | "avg2x2"
+    requant_shift: Optional[int] = None   # None = choose statically
+
+    def out_features(self) -> int:
+        return (self.weights.shape[0] if self.kind == "conv"
+                else self.weights.shape[1])
+
+
+@dataclasses.dataclass
+class CompiledLayer:
+    """A compiled layer: the VTA program + the decode metadata the host
+    needs for §4.2 reshaping."""
+
+    spec: LayerSpec
+    program: VTAProgram
+    input_matrix: np.ndarray          # A (int8), pre-padding
+    weight_matrix: np.ndarray         # B (int8), pre-padding
+    requant_shift: int
+    keep_rows: Optional[Tuple[int, ...]]   # pooled surviving rows, or None
+    out_h: Optional[int] = None       # post-pool spatial dims (conv only)
+    out_w: Optional[int] = None
+    ref_output_matrix: Optional[np.ndarray] = None  # int8 (rows×F) post-reshape
+
+    @property
+    def gemm_loops(self) -> int:
+        return self.program.gemm_loops()
+
+
+def _vec_index(row: int, col_block: int, beta: int, row_height: int) -> int:
+    """ACC-vector index of matrix row ``row`` in block column ``col_block``
+    (block-major SRAM layout, §3.2)."""
+    block_row, within = divmod(row, row_height)
+    return (block_row * beta + col_block) * row_height + within
+
+
+def choose_requant_shift(acc: np.ndarray, *, already_shifted: int = 0) -> int:
+    """Smallest shift s with ``max|acc >> (already_shifted + s)| <= 127``."""
+    m = int(np.abs(acc.astype(np.int64) >> already_shifted).max(initial=0))
+    shift = 0
+    while (m >> shift) > 127:
+        shift += 1
+    return shift
+
+
+def layer_matrices(spec: LayerSpec, inp: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, Optional[ConvGeometry]]:
+    """Hardware-agnostic stage: tensors → (A, B) matrices (Def. 3)."""
+    if spec.kind == "conv":
+        if inp.ndim != 4:
+            raise ValueError(f"conv layer {spec.name!r} needs a 4-D tensor")
+        f, c, kh, kw = spec.weights.shape
+        if inp.shape[1] != c:
+            raise ValueError(f"layer {spec.name!r}: channel mismatch "
+                             f"{inp.shape[1]} != {c}")
+        geo = ConvGeometry(c, inp.shape[2], inp.shape[3], kh, kw, spec.stride)
+        A = im2row(inp, kh, kw, spec.stride)
+        B = ker2col(spec.weights)
+        return A, B, geo
+    if spec.kind == "fc":
+        A = flatten_tensor(inp) if inp.ndim == 4 else np.asarray(inp)
+        if A.ndim != 2:
+            raise ValueError(f"fc layer {spec.name!r} needs a 2-D input")
+        B = np.asarray(spec.weights)
+        if A.shape[1] != B.shape[0]:
+            raise ValueError(f"layer {spec.name!r}: {A.shape} @ {B.shape}")
+        return A, B, None
+    raise ValueError(f"unknown layer kind {spec.kind!r}")
+
+
+def reference_layer_acc(A: np.ndarray, B: np.ndarray,
+                        bias: Optional[np.ndarray], relu: bool,
+                        pool_plan: Optional[PoolPlan]) -> np.ndarray:
+    """int64 accumulator right before the final SHR — used for the static
+    requant-shift choice and overflow check."""
+    acc = A.astype(np.int64) @ B.astype(np.int64)
+    if bias is not None:
+        acc = acc + bias.astype(np.int64)[None, :]
+    if relu:
+        acc = np.maximum(acc, 0)
+    if pool_plan is not None:
+        pooled = np.zeros((len(pool_plan.keep_rows), acc.shape[1]),
+                          dtype=np.int64)
+        for r, base in enumerate(pool_plan.keep_rows):
+            i, j = divmod(r, pool_plan.out_w)
+            in_w = pool_plan.out_w * 2
+            rows = (base, base + 1, base + in_w, base + in_w + 1)
+            pooled[r] = acc[list(rows)].sum(axis=0)
+        return pooled
+    return acc
+
+
+def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
+                  cfg: Optional[VTAConfig] = None,
+                  allocator: Optional[DramAllocator] = None) -> CompiledLayer:
+    """Compile one layer (Fig. 11) down to a :class:`VTAProgram`."""
+    cfg = cfg or vta_default()
+    bs = cfg.block_size
+    A, B, geo = layer_matrices(spec, inp)
+    M, K = A.shape
+    N = B.shape[1]
+
+    # ---- pooling plan (indices in matrix-row space) ----
+    pool_plan: Optional[PoolPlan] = None
+    if spec.pool == "avg2x2":
+        if geo is None:
+            raise ValueError("pooling requires a conv layer")
+        pool_plan = avgpool2x2_plan(geo.out_h, geo.out_w)
+    elif spec.pool is not None:
+        raise ValueError(f"unsupported pool {spec.pool!r}")
+
+    # ---- static requant shift (+ overflow check) ----
+    acc_pre_shift = reference_layer_acc(A, B, spec.bias, spec.relu, pool_plan)
+    pool_div = 2 if pool_plan is not None else 0
+    shift = (spec.requant_shift if spec.requant_shift is not None
+             else choose_requant_shift(acc_pre_shift, already_shifted=pool_div))
+    final = acc_pre_shift >> (pool_div + shift)
+    if np.abs(final).max(initial=0) > 127:
+        raise ValueError(
+            f"layer {spec.name!r}: requant shift {shift} leaves values "
+            f"outside int8 — increase requant_shift")
+
+    # ---- ALU program over ACC vectors (block-major indices) ----
+    pad_h = should_pad_height(A)
+    row_height = bs if pad_h else M
+    beta = pad_to_multiple(N, bs) // bs
+    alu_ops: List[object] = []
+    if spec.relu:
+        alu_ops.append(AluImmOp.relu())
+    if pool_plan is not None:
+        pairs = []
+        for dst, src in pool_plan.add_pairs:
+            for j in range(beta):
+                pairs.append((_vec_index(dst, j, beta, row_height),
+                              _vec_index(src, j, beta, row_height)))
+        alu_ops.append(AluPairOp(isa.AluOp.ADD, tuple(pairs)))
+        total_shift = pool_div + shift
+        if total_shift > 0:
+            idx = []
+            for r in pool_plan.keep_rows:
+                for j in range(beta):
+                    idx.append(_vec_index(r, j, beta, row_height))
+            alu_ops.append(AluIndexedImmOp(isa.AluOp.SHR, total_shift,
+                                           tuple(idx)))
+    elif shift > 0:
+        alu_ops.append(AluImmOp.shr(shift))
+
+    prog = compile_matmul(A, B, bias=spec.bias, alu_ops=alu_ops, cfg=cfg,
+                          name=spec.name, allocator=allocator)
+
+    # ---- reference post-reshape output matrix (int8) ----
+    ref = (final & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+
+    keep = pool_plan.keep_rows if pool_plan is not None else None
+    out_h = out_w = None
+    if geo is not None:
+        out_h = pool_plan.out_h if pool_plan else geo.out_h
+        out_w = pool_plan.out_w if pool_plan else geo.out_w
+    return CompiledLayer(spec=spec, program=prog, input_matrix=A,
+                         weight_matrix=B, requant_shift=shift,
+                         keep_rows=keep, out_h=out_h, out_w=out_w,
+                         ref_output_matrix=ref)
+
+
+def decode_layer_output(layer: CompiledLayer, out_matrix: np.ndarray
+                        ) -> np.ndarray:
+    """§4.2 host reshaping, stage (i)+(ii) entry: from the decoded (M, N)
+    VTA output matrix to the layer's *semantic* output.
+
+    conv → ``(1, F, H', W')`` tensor (pooled rows extracted first);
+    fc   → ``(rows, F)`` matrix.
+    """
+    if layer.keep_rows is not None:
+        out_matrix = out_matrix[list(layer.keep_rows)]
+    if layer.spec.kind == "conv":
+        return mat2tensor(out_matrix, layer.out_h, layer.out_w)
+    return out_matrix

@@ -1,0 +1,131 @@
+"""Multi-layer network compilation + chained execution (paper §4.2, Fig. 12).
+
+``compile_network`` lowers a layer list into per-layer VTA programs sharing
+one global DRAM allocation (the paper: "the data are allocated in the DRAM
+and the instructions are adapted to match this allocation strategy" — here
+the layers compile directly against the shared allocator, so no relocation
+pass is needed and every instruction's logical addresses are final).
+
+``NetworkProgram.run_functional`` then executes the chain on the functional
+simulator with the paper's host-side reshaping between VTA executions:
+
+  (i)  binary-decode the OUT region → blocks → matrix → remove padding,
+       extract pooled rows → ``mat2tensor``;
+  (ii) next layer's ``im2row`` (or NCHW flatten) → pad → split → binarise →
+       written into the next program's INP region of the shared DRAM image.
+
+Stage (ii) recomputes bytes that the compiler already placed in the image
+(the compiler compiled every layer against reference activations); the run
+asserts they agree — any divergence is a compilation bug, which is exactly
+the traceability check the paper's workflow enables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .conv_lowering import flatten_tensor, tensor2mat
+from .cycle_model import CycleReport, analyze_programs
+from .dram import DramAllocator
+from .hwconfig import VTAConfig, vta_default
+from .layer_compiler import (CompiledLayer, LayerSpec, compile_layer,
+                             decode_layer_output, layer_matrices)
+from .layout import matrix_to_binary, should_pad_height
+from .simulator import FunctionalSimulator, SimReport, decode_out_region
+
+
+@dataclasses.dataclass
+class NetworkProgram:
+    """Everything needed to run a compiled network on a VTA."""
+
+    config: VTAConfig
+    allocator: DramAllocator
+    layers: List[CompiledLayer]
+    input_tensor: np.ndarray
+
+    # ------------------------------------------------------------------
+    def gemm_loops(self) -> int:
+        """§5.1 metric over the whole network (LeNet-5: 2942)."""
+        return sum(l.program.gemm_loops() for l in self.layers)
+
+    def gemm_loops_per_layer(self) -> List[int]:
+        return [l.program.gemm_loops() for l in self.layers]
+
+    def cycle_report(self) -> CycleReport:
+        return analyze_programs([l.program for l in self.layers])
+
+    def dram_image(self) -> np.ndarray:
+        image = np.zeros(self.allocator.image_size(), dtype=np.uint8)
+        for layer in self.layers:
+            layer.program.place_segments(image)
+        return image
+
+    # ------------------------------------------------------------------
+    def run_functional(self, *, check_chaining: bool = True
+                       ) -> Tuple[np.ndarray, List[SimReport]]:
+        """Fig. 12: one VTA execution per layer + host reshaping between.
+
+        Returns the final layer's semantic output (fc → (rows, F) int8
+        matrix) and the per-execution simulator reports.
+        """
+        image = self.dram_image()
+        reports: List[SimReport] = []
+        semantic = None
+        for k, layer in enumerate(self.layers):
+            sim = FunctionalSimulator(self.config, image)
+            reports.append(sim.run(layer.program.instructions))
+            image = sim.dram   # VTA wrote its OUT region
+            out_mat = decode_out_region(layer.program, image)
+            semantic = decode_layer_output(layer, out_mat)
+            if k + 1 < len(self.layers):
+                nxt = self.layers[k + 1]
+                A, _, _ = layer_matrices(nxt.spec, semantic)
+                if check_chaining:
+                    np.testing.assert_array_equal(
+                        A, nxt.input_matrix,
+                        err_msg=f"layer {k}->{k+1} reshaping mismatch")
+                inp_bin, _ = matrix_to_binary(
+                    A, self.config.block_size, self.config.inp_dtype)
+                region = nxt.program.regions["inp"]
+                start = region.phys_addr - self.allocator.offset
+                image[start:start + len(inp_bin)] = np.frombuffer(
+                    inp_bin, dtype=np.uint8)
+        return semantic, reports
+
+    def verify(self) -> Tuple[np.ndarray, List[SimReport]]:
+        """Run the chain and check the final output against the compiler's
+        per-layer reference.  Returns (final output, reports)."""
+        out, reports = self.run_functional()
+        expected = self.layers[-1].ref_output_matrix
+        if self.layers[-1].spec.kind == "conv":
+            from .conv_lowering import mat2tensor
+            expected = mat2tensor(expected, self.layers[-1].out_h,
+                                  self.layers[-1].out_w)
+        np.testing.assert_array_equal(out, expected)
+        return out, reports
+
+
+def compile_network(specs: Sequence[LayerSpec], input_tensor: np.ndarray, *,
+                    cfg: Optional[VTAConfig] = None,
+                    dram_offset: int = 0) -> NetworkProgram:
+    """Compile a network: every layer against one shared DRAM allocation,
+    each layer's input taken from the previous layer's reference output."""
+    cfg = cfg or vta_default()
+    alloc = DramAllocator(offset=dram_offset, page_bytes=cfg.page_bytes)
+    layers: List[CompiledLayer] = []
+    current: np.ndarray = np.asarray(input_tensor, dtype=np.int8)
+    for spec in specs:
+        layer = compile_layer(spec, current, cfg=cfg, allocator=alloc)
+        layers.append(layer)
+        # Reference output becomes the next layer's input (semantic form).
+        ref = layer.ref_output_matrix
+        if spec.kind == "conv":
+            from .conv_lowering import mat2tensor
+            current = mat2tensor(ref, layer.out_h, layer.out_w)
+        else:
+            current = ref
+    return NetworkProgram(config=cfg, allocator=alloc, layers=layers,
+                          input_tensor=np.asarray(input_tensor))

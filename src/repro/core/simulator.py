@@ -1,0 +1,345 @@
+"""Functional VTA simulator (paper §5.1) — bit-accurate instruction interpreter.
+
+Replaces the paper's extracted C++ functional simulator with a pure-numpy
+interpreter that consumes exactly the artefacts the compiler emits: a DRAM
+image (or the per-region segments) plus the instruction stream.  It is the
+*oracle* every other execution path (vectorised JAX interpreter, Pallas
+kernels) is validated against.
+
+Semantics implemented:
+
+* LOAD/STORE — 2-D strided DRAM<->SRAM moves with x/y zero-padding
+  (``MemInsn``), per buffer (UOP/WGT/INP/ACC/OUT);
+* GEMM — Algorithm 1 verbatim, including ``reset``; int8×int8 products
+  accumulated into int32 with wrap-around;
+* ALU — MIN/MAX/ADD/SHR over ACC vectors, immediate or vector-pair form;
+* FINISH — terminates execution;
+* dependency flags — the 4 producer/consumer token queues of §2.3 are
+  modelled as counters; a pop on an empty queue means the compiler emitted a
+  hazard (the real hardware would deadlock), so the simulator raises.
+
+Observability (§5.1): the simulator reports DRAM traffic, GeMM/ALU loop
+counts and per-instruction execution order — the metrics the paper uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import isa
+from .hwconfig import VTAConfig
+from .program import VTAProgram
+
+
+class VTAHazardError(RuntimeError):
+    """A dependency-token pop on an empty queue: the instruction stream
+    would deadlock the Load/Compute/Store modules on real hardware."""
+
+
+@dataclasses.dataclass
+class SimReport:
+    """What the functional simulator can observe (§5.1)."""
+
+    gemm_loops: int = 0            # non-reset GeMM loops (the 2942 metric)
+    gemm_reset_loops: int = 0
+    alu_loops: int = 0
+    dram_bytes_read: int = 0
+    dram_bytes_written: int = 0
+    insn_executed: int = 0
+    insn_trace: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def dram_bytes_total(self) -> int:
+        return self.dram_bytes_read + self.dram_bytes_written
+
+
+def _wrap32(x: np.ndarray) -> np.ndarray:
+    return x.astype(np.int64).astype(np.int32)
+
+
+class FunctionalSimulator:
+    """Bit-accurate VTA functional simulator."""
+
+    def __init__(self, cfg: VTAConfig, dram: np.ndarray, *, trace: bool = False):
+        if dram.dtype != np.uint8:
+            raise TypeError("dram image must be uint8")
+        self.cfg = cfg
+        self.dram = dram.copy()
+        self.trace = trace
+        bs = cfg.block_size
+        # SRAM buffers, in structure units.
+        self.uop_buf = np.zeros((cfg.uop_buff_entries, 3), dtype=np.int64)
+        self.inp_buf = np.zeros((cfg.inp_buff_vectors, bs), dtype=np.int8)
+        self.wgt_buf = np.zeros((cfg.wgt_buff_matrices, bs, bs), dtype=np.int8)
+        self.acc_buf = np.zeros((cfg.acc_buff_vectors, bs), dtype=np.int32)
+        self.out_buf = np.zeros((cfg.out_buff_vectors, bs), dtype=np.int8)
+        # Dependency-token queues between modules (§2.3).  Keyed by
+        # (producer, consumer); counters model the hardware FIFOs.
+        self.queues: Dict[Tuple[str, str], int] = {
+            ("load", "compute"): 0, ("compute", "load"): 0,
+            ("compute", "store"): 0, ("store", "compute"): 0,
+        }
+        self.report = SimReport()
+
+    # ------------------------------------------------------------------
+    # Token handling.  Module assignment mirrors the VTA runtime: LOAD INP/
+    # WGT run on the Load module; LOAD UOP/ACC, GEMM and ALU on Compute;
+    # STORE OUT on Store.  prev/next are relative to the pipeline order
+    # Load -> Compute -> Store.
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _module_of(insn) -> str:
+        if isinstance(insn, isa.MemInsn):
+            if insn.opcode == isa.Opcode.STORE:
+                return "store"
+            if insn.memory_type in (isa.MemId.INP, isa.MemId.WGT):
+                return "load"
+            return "compute"
+        return "compute"           # GEMM / ALU / FINISH
+
+    _PREV = {"load": None, "compute": "load", "store": "compute"}
+    _NEXT = {"load": "compute", "compute": "store", "store": None}
+
+    def _pop(self, src: Optional[str], dst: str) -> None:
+        if src is None:
+            raise VTAHazardError(f"{dst}: pop from nonexistent neighbour")
+        if self.queues[(src, dst)] <= 0:
+            raise VTAHazardError(
+                f"dependency hazard: {dst} pops empty queue from {src}")
+        self.queues[(src, dst)] -= 1
+
+    def _push(self, src: str, dst: Optional[str]) -> None:
+        if dst is None:
+            raise VTAHazardError(f"{src}: push to nonexistent neighbour")
+        self.queues[(src, dst)] += 1
+
+    def _handle_deps_pre(self, insn) -> None:
+        mod = self._module_of(insn)
+        if insn.dep.pop_prev:
+            self._pop(self._PREV[mod], mod)
+        if insn.dep.pop_next:
+            self._pop(self._NEXT[mod], mod)
+
+    def _handle_deps_post(self, insn) -> None:
+        mod = self._module_of(insn)
+        if insn.dep.push_prev:
+            self._push(mod, self._PREV[mod])
+        if insn.dep.push_next:
+            self._push(mod, self._NEXT[mod])
+
+    # ------------------------------------------------------------------
+    # Memory instructions
+    # ------------------------------------------------------------------
+    def _mem_view(self, mem: isa.MemId):
+        return {
+            isa.MemId.UOP: self.uop_buf,
+            isa.MemId.INP: self.inp_buf,
+            isa.MemId.WGT: self.wgt_buf,
+            isa.MemId.ACC: self.acc_buf,
+            isa.MemId.OUT: self.out_buf,
+        }[mem]
+
+    _MEM_KIND = {
+        isa.MemId.UOP: "uop", isa.MemId.INP: "inp", isa.MemId.WGT: "wgt",
+        isa.MemId.ACC: "acc", isa.MemId.OUT: "out",
+    }
+
+    def _struct_from_dram(self, kind: str, log_addr: int) -> np.ndarray:
+        cfg = self.cfg
+        nbytes = cfg.elem_bytes(kind)
+        start = log_addr * nbytes
+        raw = self.dram[start:start + nbytes]
+        if len(raw) < nbytes:
+            raise IndexError(
+                f"DRAM read out of range: {kind} logical @{log_addr:#x}")
+        self.report.dram_bytes_read += nbytes
+        bs = cfg.block_size
+        if kind == "uop":
+            word = int.from_bytes(raw.tobytes(), "little")
+            acc, inp, wgt = isa._unpack(word, isa.Uop.W)
+            return np.array([acc, inp, wgt], dtype=np.int64)
+        if kind == "inp":
+            return raw.view(np.int8).reshape(bs)
+        if kind == "wgt":
+            return raw.view(np.int8).reshape(bs, bs)
+        if kind == "acc":
+            return raw.view("<i4").reshape(bs).astype(np.int32)
+        raise ValueError(kind)
+
+    def _struct_to_dram(self, kind: str, log_addr: int, data: np.ndarray) -> None:
+        cfg = self.cfg
+        nbytes = cfg.elem_bytes(kind)
+        start = log_addr * nbytes
+        if start + nbytes > len(self.dram):
+            raise IndexError(
+                f"DRAM write out of range: {kind} logical @{log_addr:#x}")
+        self.dram[start:start + nbytes] = np.frombuffer(
+            np.ascontiguousarray(data).tobytes(), dtype=np.uint8)
+        self.report.dram_bytes_written += nbytes
+
+    def _exec_mem(self, insn: isa.MemInsn) -> None:
+        kind = self._MEM_KIND[insn.memory_type]
+        buf = self._mem_view(insn.memory_type)
+        if insn.opcode == isa.Opcode.LOAD:
+            sram = insn.sram_base
+            for y in range(insn.y_pad_0):
+                for _ in range(insn.x_pad_0 + insn.x_size + insn.x_pad_1):
+                    buf[sram] = 0
+                    sram += 1
+            for y in range(insn.y_size):
+                for _ in range(insn.x_pad_0):
+                    buf[sram] = 0
+                    sram += 1
+                dram = insn.dram_base + y * insn.x_stride
+                for x in range(insn.x_size):
+                    buf[sram] = self._struct_from_dram(kind, dram + x)
+                    sram += 1
+                for _ in range(insn.x_pad_1):
+                    buf[sram] = 0
+                    sram += 1
+            for y in range(insn.y_pad_1):
+                for _ in range(insn.x_pad_0 + insn.x_size + insn.x_pad_1):
+                    buf[sram] = 0
+                    sram += 1
+        else:  # STORE (OUT only on real VTA)
+            sram = insn.sram_base
+            for y in range(insn.y_size):
+                dram = insn.dram_base + y * insn.x_stride
+                for x in range(insn.x_size):
+                    self._struct_to_dram(kind, dram + x, buf[sram])
+                    sram += 1
+
+    # ------------------------------------------------------------------
+    # GEMM — Algorithm 1, verbatim loop structure.
+    # ------------------------------------------------------------------
+    def _exec_gemm(self, g: isa.GemInsn) -> None:
+        n_uop = max(0, g.uop_end - g.uop_bgn)
+        if g.reset:
+            for i_out in range(g.iter_out):
+                for i_in in range(g.iter_in):
+                    for u in range(g.uop_bgn, g.uop_end):
+                        acc0, _, _ = self.uop_buf[u]
+                        x = (i_out * g.acc_factor_out + i_in * g.acc_factor_in
+                             + int(acc0))
+                        self.acc_buf[x] = 0
+            self.report.gemm_reset_loops += g.iter_out * g.iter_in * n_uop
+            return
+        for i_out in range(g.iter_out):
+            for i_in in range(g.iter_in):
+                for u in range(g.uop_bgn, g.uop_end):
+                    acc0, inp0, wgt0 = (int(v) for v in self.uop_buf[u])
+                    x = i_out * g.acc_factor_out + i_in * g.acc_factor_in + acc0
+                    a = i_out * g.inp_factor_out + i_in * g.inp_factor_in + inp0
+                    w = i_out * g.wgt_factor_out + i_in * g.wgt_factor_in + wgt0
+                    A = self.inp_buf[a].astype(np.int32)
+                    W = self.wgt_buf[w].astype(np.int32)
+                    # acc[x] += A · Wᵀ  (W stored transposed ⇒ A·B, §2.3)
+                    prod = (A[None, :] * W).sum(axis=1, dtype=np.int64)
+                    self.acc_buf[x] = _wrap32(self.acc_buf[x].astype(np.int64)
+                                              + prod)
+        self.report.gemm_loops += g.iter_out * g.iter_in * n_uop
+
+    # ------------------------------------------------------------------
+    def _exec_alu(self, a: isa.AluInsn) -> None:
+        n_uop = max(0, a.uop_end - a.uop_bgn)
+        for i_out in range(a.iter_out):
+            for i_in in range(a.iter_in):
+                for u in range(a.uop_bgn, a.uop_end):
+                    dst0, src0, _ = (int(v) for v in self.uop_buf[u])
+                    d = i_out * a.dst_factor_out + i_in * a.dst_factor_in + dst0
+                    s = i_out * a.src_factor_out + i_in * a.src_factor_in + src0
+                    x = self.acc_buf[d].astype(np.int64)
+                    y = (np.int64(a.imm) if a.use_imm
+                         else self.acc_buf[s].astype(np.int64))
+                    if a.alu_opcode == isa.AluOp.MIN:
+                        r = np.minimum(x, y)
+                    elif a.alu_opcode == isa.AluOp.MAX:
+                        r = np.maximum(x, y)
+                    elif a.alu_opcode == isa.AluOp.ADD:
+                        r = x + y
+                    elif a.alu_opcode == isa.AluOp.SHR:
+                        r = x >> (y & 31) if a.use_imm else x >> (y & 31)
+                    else:
+                        raise ValueError(a.alu_opcode)
+                    self.acc_buf[d] = _wrap32(r)
+        self.report.alu_loops += a.iter_out * a.iter_in * n_uop
+
+    # ------------------------------------------------------------------
+    def _commit_out(self) -> None:
+        """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
+        self.out_buf[:] = (self.acc_buf & 0xFF).astype(np.uint8).view(np.int8)
+
+    def run(self, instructions) -> SimReport:
+        for insn in instructions:
+            self._handle_deps_pre(insn)
+            if isinstance(insn, isa.MemInsn):
+                if insn.opcode == isa.Opcode.STORE:
+                    self._commit_out()
+                self._exec_mem(insn)
+                tag = f"{insn.opcode.name} {insn.memory_type.name}"
+            elif isinstance(insn, isa.GemInsn):
+                self._exec_gemm(insn)
+                tag = f"GEMM{' reset' if insn.reset else ''}"
+            elif isinstance(insn, isa.AluInsn):
+                self._exec_alu(insn)
+                tag = f"ALU {insn.alu_opcode.name}"
+            elif isinstance(insn, isa.FinishInsn):
+                tag = "FINISH"
+            else:
+                raise TypeError(insn)
+            self.report.insn_executed += 1
+            if self.trace:
+                self.report.insn_trace.append(tag)
+            self._handle_deps_post(insn)
+            if isinstance(insn, isa.FinishInsn):
+                break
+        return self.report
+
+
+# ---------------------------------------------------------------------------
+# Program-level drivers
+# ---------------------------------------------------------------------------
+
+def run_program(prog: VTAProgram, *, trace: bool = False
+                ) -> Tuple[np.ndarray, SimReport]:
+    """Execute a compiled program; return (decoded result matrix, report).
+
+    The decoded matrix is the *unpadded* (M, N) int8 result, reconstructed
+    from the OUT region exactly as the §4.2 host-side reshaping does.
+    """
+    sim = FunctionalSimulator(prog.config, prog.dram_image(), trace=trace)
+    report = sim.run(prog.instructions)
+    out = decode_out_region(prog, sim.dram)
+    return out, report
+
+
+def decode_out_region(prog: VTAProgram, dram: np.ndarray) -> np.ndarray:
+    """§4.2 stage (i): binary-decode OUT, unsplit blocks, remove padding."""
+    cfg = prog.config
+    meta = prog.output_meta
+    if meta is None:
+        raise ValueError("program has no output metadata")
+    region = prog.regions["out"]
+    start = region.phys_addr - prog.allocator.offset
+    raw = dram[start:start + region.nbytes].view(np.int8)
+    bs = cfg.block_size
+    rh = meta.row_height
+    vecs = raw.reshape(meta.block_rows * meta.block_cols * rh, bs)
+    blocks = vecs.reshape(meta.block_rows, meta.block_cols, rh, bs)
+    full = blocks.transpose(0, 2, 1, 3).reshape(meta.block_rows * rh,
+                                                meta.block_cols * bs)
+    m, n = meta.valid_shape
+    return np.ascontiguousarray(full[:m, :n])
+
+
+def verify_program(prog: VTAProgram, *, trace: bool = False) -> SimReport:
+    """Run + assert the simulator output equals the compiler's oracle."""
+    out, report = run_program(prog, trace=trace)
+    m, n = prog.output_meta.valid_shape
+    expected = prog.expected_out[:m, :n]
+    np.testing.assert_array_equal(out, expected,
+                                  err_msg=f"program {prog.name!r} mismatch")
+    return report

@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline.
+
+Sequences are generated from a seeded per-(step, sequence) hash so any
+shard of the global batch is reproducible independently — exactly what a
+restart-after-failure needs: the pipeline is stateless, resuming at step N
+regenerates the same batches a failed run saw (tested in
+tests/test_fault_tolerance.py).
+
+The token stream is a order-2 Markov chain over the vocab (so models can
+actually learn structure in the end-to-end example), with labels = next
+token.  ``make_global_batch`` builds a sharded ``jax.Array`` directly from
+per-shard callbacks — no host gathers the full global batch (the pattern
+that scales to 1000+ hosts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend_prefix: int = 0       # VLM/audio: embeddings prefix length
+    d_model: int = 0               # for prefix embeddings
+    encoder_seq: int = 0           # whisper frames
+
+
+def _seq_rng(cfg: DataConfig, step: int, index: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, index]))
+
+
+def synth_sequence(cfg: DataConfig, step: int, index: int) -> np.ndarray:
+    """Order-2 Markov chain tokens (seq_len + 1,)."""
+    rng = _seq_rng(cfg, step, index)
+    v = cfg.vocab
+    out = np.empty(cfg.seq_len + 1, np.int32)
+    out[0] = rng.integers(v)
+    out[1] = rng.integers(v)
+    # two cheap hash-mixed transitions make the stream learnable
+    a = int(rng.integers(1, v))
+    b = int(rng.integers(1, v))
+    noise = rng.random(cfg.seq_len + 1)
+    for t in range(2, cfg.seq_len + 1):
+        if noise[t] < 0.1:
+            out[t] = rng.integers(v)
+        else:
+            out[t] = (a * out[t - 1] + b * out[t - 2] + 7) % v
+    return out
+
+
+def host_batch(cfg: DataConfig, step: int, lo: int, hi: int
+               ) -> Dict[str, np.ndarray]:
+    """Sequences [lo, hi) of the global batch for this step."""
+    seqs = np.stack([synth_sequence(cfg, step, i) for i in range(lo, hi)])
+    batch = {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+    if cfg.frontend_prefix and cfg.d_model:
+        rng = _seq_rng(cfg, step, -1)
+        batch["prefix_embed"] = rng.normal(
+            0, 0.02, (hi - lo, cfg.frontend_prefix, cfg.d_model)
+        ).astype(np.float32)
+    if cfg.encoder_seq and cfg.d_model:
+        rng = _seq_rng(cfg, step, -2)
+        batch["frames"] = rng.normal(
+            0, 0.02, (hi - lo, cfg.encoder_seq, cfg.d_model)
+        ).astype(np.float32)
+    return batch
+
+
+def make_global_batch(cfg: DataConfig, step: int, mesh: Mesh
+                      ) -> Dict[str, jax.Array]:
+    """Build the sharded global batch via per-shard callbacks."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = P(batch_axes if len(batch_axes) > 1 else
+             (batch_axes[0] if batch_axes else None))
+
+    def build(name: str, shape, dtype):
+        sharding = NamedSharding(mesh, spec)
+
+        def cb(index) -> np.ndarray:
+            lo = index[0].start or 0
+            hi = index[0].stop or cfg.global_batch
+            data = host_batch(cfg, step, lo, hi)[name]
+            rest = tuple(sl for sl in index[1:])
+            return data[(slice(None),) + rest].astype(dtype)
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    b, s = cfg.global_batch, cfg.seq_len
+    out = {"tokens": build("tokens", (b, s), np.int32),
+           "labels": build("labels", (b, s), np.int32)}
+    if cfg.frontend_prefix and cfg.d_model:
+        out["prefix_embed"] = build(
+            "prefix_embed", (b, cfg.frontend_prefix, cfg.d_model), np.float32)
+    if cfg.encoder_seq and cfg.d_model:
+        out["frames"] = build(
+            "frames", (b, cfg.encoder_seq, cfg.d_model), np.float32)
+    return out

@@ -1,0 +1,117 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, backend selection (real Pallas on
+TPU, ``interpret=True`` elsewhere — this container is CPU-only so every test
+runs the kernel bodies in interpret mode), and the pure-JAX fallbacks used
+by the dry-run path (XLA lowers those for the roofline analysis; see
+DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+from .vta_gemm import vta_gemm as _vta_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vta_matmul(a: jax.Array, b: jax.Array,
+               bias: Optional[jax.Array] = None, *,
+               relu: bool = False, shift: int = 0, saturate: bool = True,
+               out_dtype=jnp.int8,
+               block_m: int = 256, block_n: int = 256, block_k: int = 256,
+               backend: str = "auto") -> jax.Array:
+    """Fused W8A8 GEMM (the paper's datapath as a TPU feature).
+
+    backend: "pallas" | "xla" | "auto" (pallas on TPU, interpret elsewhere
+    only if explicitly requested — interpret mode is for tests; "auto" off
+    TPU uses the XLA reference, which is semantically identical).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    if backend == "xla" or (backend == "auto" and not _on_tpu()):
+        return _ref.vta_gemm_ref(a, b, bias, relu=relu, shift=shift,
+                                 saturate=saturate, out_dtype=out_dtype)
+    interpret = not _on_tpu()
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    bias_p = (jnp.pad(bias, (0, np_ - n)) if bias is not None else None)
+    out = _vta_gemm(a_p, b_p, bias_p, relu=relu, shift=shift,
+                    saturate=saturate, out_dtype=out_dtype,
+                    block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, sm_scale: Optional[float] = None,
+              window: Optional[int] = None, q_offset: int = 0,
+              block_q: int = 128, block_k: int = 128,
+              backend: str = "auto") -> jax.Array:
+    """Flash attention with GQA; pads sequence dims to block multiples."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if backend == "xla" or (backend == "auto" and not _on_tpu()):
+        return _ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale,
+                                  window=window, q_offset=q_offset)
+    interpret = not _on_tpu()
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(skv, 8))
+    sq_p, skv_p = _round_up(sq, bq), _round_up(skv, bk)
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    out = _flash(q_p, k_p, v_p, causal=causal, sm_scale=sm_scale,
+                 window=window, q_offset=q_offset,
+                 block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+def vta_matmul_pallas(a, b, bias=None, **kw):
+    """Force the Pallas path (interpret off-TPU) — used by kernel tests."""
+    kw.setdefault("backend", "pallas")
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(kw.pop("block_m", 256), _round_up(m, 8))
+    bn = min(kw.pop("block_n", 256), _round_up(n, 128))
+    bk = min(kw.pop("block_k", 256), _round_up(k, 128))
+    kw.pop("backend")
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    bias_p = (jnp.pad(bias, (0, np_ - n)) if bias is not None else None)
+    out = _vta_gemm(a_p, b_p, bias_p, block_m=bm, block_n=bn, block_k=bk,
+                    interpret=not _on_tpu(), **kw)
+    return out[:m, :n]
+
+
+def attention_pallas(q, k, v, **kw):
+    """Force the Pallas path (interpret off-TPU) — used by kernel tests."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    bq = min(kw.pop("block_q", 128), _round_up(sq, 8))
+    bk = min(kw.pop("block_k", 128), _round_up(skv, 8))
+    sq_p, skv_p = _round_up(sq, bq), _round_up(skv, bk)
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    out = _flash(q_p, k_p, v_p, block_q=bq, block_k=bk,
+                 interpret=not _on_tpu(), **kw)
+    return out[:, :, :sq, :]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the kernel test contracts)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def vta_gemm_ref(a: jax.Array, b: jax.Array,
+                 bias: Optional[jax.Array] = None, *,
+                 relu: bool = False, shift: int = 0, saturate: bool = True,
+                 out_dtype=jnp.int8) -> jax.Array:
+    """Oracle for kernels.vta_gemm: int32 accumulate + TensorAlu epilogue."""
+    acc = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if shift:
+        acc = jax.lax.shift_right_arithmetic(acc, jnp.int32(shift))
+    if out_dtype == jnp.int8:
+        if saturate:
+            acc = jnp.clip(acc, -128, 127)
+        else:
+            acc = jax.lax.shift_right_arithmetic(
+                jax.lax.shift_left(acc, 24), jnp.int32(24))
+    return acc.astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, sm_scale: Optional[float] = None,
+                  window: Optional[int] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """Oracle for kernels.flash_attention (float32 softmax, GQA-aware)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with every position masked: softmax gives uniform; zero them
+    any_valid = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and extract the roofline terms.
+
+MUST keep the two lines above as the very first statements — jax locks the
+device count on first initialisation, and the 512 placeholder host devices
+exist only inside this entry point (tests and benches see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+For each cell the dry-run records: memory_analysis (bytes/device),
+cost_analysis (FLOPs, bytes accessed), and the per-collective byte volumes
+parsed from the optimized HLO — the inputs to EXPERIMENTS.md §Roofline.
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* shape bytes of every collective op in the optimized HLO
+    (per-participant payload — the standard wire-volume proxy)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        # "  name = bf16[...]{...} all-gather(...)" — op name after '='
+        m = re.search(r"=\s+(\(?[a-z0-9,\[\]{}: ()]+?\)?)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if (ls.startswith("ROOT") is False and "-done" in ls.split("=")[0]):
+            continue  # count the -start, skip the matching -done
+        out[op] += _shape_bytes(shape_str)
+        out["count"] += 1
+    return out
+
+
+def apply_variant(arch: str, shape: str, variant: str):
+    """§Perf hillclimb variants: config/train-config transforms applied on
+    top of the current code.  Comma-separated combos compose."""
+    import dataclasses
+    from repro.launch.specs import default_train_config
+    from repro.configs import SHAPES as _SH
+    cfg = get_config(arch)
+    tcfg = default_train_config(arch, _SH[shape])
+    for v in [v for v in variant.split(",") if v and v != "baseline"]:
+        if v == "causal_skip":
+            cfg = dataclasses.replace(cfg, causal_skip=True)
+        elif v == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat="dots")
+        elif v.startswith("micro"):
+            tcfg = dataclasses.replace(tcfg, microbatches=int(v[5:]))
+        elif v.startswith("qchunk"):
+            n = int(v[6:])
+            cfg = dataclasses.replace(cfg, q_chunk=n, kv_chunk=n)
+        else:
+            raise ValueError(f"unknown variant {v!r}")
+    return cfg, tcfg
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             cfg=None, train_cfg=None,
+             save_hlo: Optional[pathlib.Path] = None) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        kw = {"cfg": cfg}
+        if train_cfg is not None and SHAPES[shape].kind == "train":
+            kw["train_cfg"] = train_cfg
+        lowerable = build_cell(arch, shape, mesh, **kw)
+        arg_bytes = lowerable.arg_bytes_per_device
+        lowered = lowerable.lower()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # loop-aware per-device cost (EXPERIMENTS.md §Roofline inputs)
+    from repro.analysis.hlo_cost import analyze_hlo
+    n_dev = 512 if multi_pod else 256
+    scaled = analyze_hlo(hlo, n_dev)
+    if save_hlo is not None:
+        save_hlo.parent.mkdir(parents=True, exist_ok=True)
+        save_hlo.write_text(hlo)
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "xla_flops_unscaled": cost.get("flops", 0.0) if cost else None,
+        "xla_bytes_unscaled": cost.get("bytes accessed", 0.0) if cost else None,
+        "collectives_unscaled": coll,
+        "cost": scaled,
+        "arg_bytes_per_device": arg_bytes,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        } if mem is not None else None,
+    }
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2×16×16 (512 chips) instead of 16×16")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="comma-separated §Perf variants: causal_skip, "
+                         "remat_dots, microN, qchunkN")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if skip is None]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        todo = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+            if args.variant != "baseline":
+                tag += f"_{args.variant.replace(',', '+')}"
+            try:
+                vcfg, vtcfg = apply_variant(arch, shape, args.variant)
+                res = run_cell(
+                    arch, shape, multi_pod=mp, cfg=vcfg, train_cfg=vtcfg,
+                    save_hlo=(out_dir / f"{tag}.hlo"
+                              if args.save_hlo else None))
+                res["variant"] = args.variant
+                (out_dir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+                mem = res["memory"] or {}
+                c = res["cost"]
+                print(f"OK  {tag}: flops/dev={c['flops_per_device']:.3e} "
+                      f"bytes/dev={c['bytes_per_device']:.3e} "
+                      f"wire/dev={c['collective_wire_per_device']:.3e} "
+                      f"args/dev={res['arg_bytes_per_device']:.3e} "
+                      f"compile={res['compile_s']}s", flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

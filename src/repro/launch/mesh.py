@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` before any jax initialisation and
+only then builds meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single pod; 2×16×16 (pod, data, model) for the
+    512-chip two-pod deployment."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,379 @@
+"""Abstract inputs + shardings for every (arch × shape × mesh) cell.
+
+Everything here is allocation-free: parameters, optimizer state, batches
+and KV caches materialise as ``ShapeDtypeStruct`` trees, and the step
+functions lower against them (``launch/dryrun.py``).  The same builders
+feed the real training/serving drivers with concrete arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import BIG_ARCHS, SHAPES, ShapeSpec, get_config
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params, logical_tree
+from repro.models.transformer import model_defs
+from repro.optim import adamw
+from repro.parallel.sharding import logical_to_spec, spec_tree
+from repro.serving.cache import CacheTree, cache_logical_tree, init_cache
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, n: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) that evenly divides n."""
+    out = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and n % (size * mesh.shape[a]) == 0:
+            out.append(a)
+            size *= mesh.shape[a]
+    return tuple(out)
+
+
+def batch_spec(mesh: Mesh, n: int, extra_dims: int = 1) -> P:
+    axes = batch_axes(mesh, n)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *([None] * extra_dims)) if extra_dims else P(lead)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# parameters + optimizer
+# ---------------------------------------------------------------------------
+
+def param_pack(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    defs = model_defs(cfg)
+    abstract = abstract_params(defs, dtype)
+    specs = spec_tree(logical_tree(defs), mesh)
+    return defs, abstract, specs
+
+
+def _moment_abstract(p: jax.ShapeDtypeStruct, eightbit: bool):
+    if not eightbit:
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    nb = adamw.scale_blocks(p.shape[-1])
+    return adamw.Moment8(
+        jax.ShapeDtypeStruct(p.shape, jnp.int8),
+        jax.ShapeDtypeStruct(p.shape[:-1] + (nb,), jnp.float32))
+
+
+def _sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that no longer divide (scale tensors' shrunken last dim)."""
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                          - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep, size = [], 1
+        for a in axes:
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        fixed.append(tuple(keep) if len(keep) > 1
+                     else (keep[0] if keep else None))
+    return P(*fixed)
+
+
+def _moment_spec(param_spec: P, p: jax.ShapeDtypeStruct, eightbit: bool,
+                 mesh: Mesh):
+    """int8 moments are parameter-shaped → they inherit the parameter's
+    sharding verbatim (zero resharding in the optimizer step; the earlier
+    flat layout cost ~300 s/step of resharding collectives on the 340B
+    config — EXPERIMENTS.md §Perf)."""
+    if not eightbit:
+        return param_spec
+    nb = adamw.scale_blocks(p.shape[-1])
+    return adamw.Moment8(
+        param_spec, _sanitize_spec(param_spec, p.shape[:-1] + (nb,), mesh))
+
+
+def opt_pack(abstract_p, param_specs, mesh: Mesh, eightbit: bool):
+    mu = jax.tree.map(lambda p: _moment_abstract(p, eightbit), abstract_p)
+    mu_s = jax.tree.map(
+        lambda s, p: _moment_spec(s, p, eightbit, mesh),
+        param_specs, abstract_p,
+        is_leaf=lambda x: isinstance(x, P))
+    state = adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=mu, nu=mu)
+    specs = adamw.AdamWState(step=P(), mu=mu_s, nu=mu_s)
+    return state, specs
+
+
+# ---------------------------------------------------------------------------
+# input_specs — the assignment's entry point
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """Training-batch ShapeDtypeStructs + PartitionSpecs for one shape."""
+    b, s = shape.global_batch, shape.seq_len
+    s_tok = s - cfg.frontend_prefix
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_tok), jnp.int32),
+    }
+    specs: Dict[str, P] = {
+        "tokens": batch_spec(mesh, b, 1),
+        "labels": batch_spec(mesh, b, 1),
+    }
+    if cfg.frontend_prefix:
+        batch["prefix_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_prefix, cfg.d_model), jnp.bfloat16)
+        specs["prefix_embed"] = batch_spec(mesh, b, 2)
+    if cfg.encoder_layers:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = batch_spec(mesh, b, 2)
+    return batch, specs
+
+
+def default_train_config(arch_id: str, shape: ShapeSpec) -> TrainConfig:
+    big = arch_id in BIG_ARCHS
+    # micro4 over micro8: fewer per-µb weight all-gathers (§Perf iter 3);
+    # SP-sharded residual carries keep the activation memory in budget
+    micro = 4 if shape.global_batch >= 64 else 1
+    return TrainConfig(
+        microbatches=micro,
+        grad_accum_dtype=jnp.bfloat16 if big else jnp.float32,
+        opt=adamw.AdamWConfig(eightbit=big),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode / prefill)
+# ---------------------------------------------------------------------------
+
+def cache_pack(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, *, seq_all: bool = False):
+    """Abstract CacheTree + PartitionSpec tree.
+
+    ``seq_all`` (long-context, batch=1): dense-KV sequence shards over
+    *both* (data, model) — 512k tokens / 256 chips."""
+    abstract = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq, dtype))
+
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def resolve(lg):
+        spec = []
+        for ax in lg:
+            if ax == "batch":
+                axes = batch_axes(mesh, batch)
+                spec.append(axes if len(axes) > 1 else
+                            (axes[0] if axes else None))
+            elif ax == "seq":
+                if seq_all:
+                    axes = tuple(a for a in ("data", "model")
+                                 if a in mesh.axis_names)
+                    spec.append(axes if len(axes) > 1 else
+                                (axes[0] if axes else None))
+                else:
+                    spec.append("model" if "model" in mesh.axis_names
+                                else None)
+            elif ax == "tp":
+                spec.append("model" if "model" in mesh.axis_names else None)
+            elif ax is None:
+                spec.append(None)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    logical = cache_logical_tree(cfg)
+    specs = jax.tree.map(resolve, logical, is_leaf=is_lg)
+
+    # drop non-dividing axes (e.g. batch=1) leaf by leaf
+    def sanitize(spec, leaf):
+        fixed = []
+        for dim, entry in zip(leaf.shape,
+                              tuple(spec) + (None,) * (len(leaf.shape)
+                                                       - len(spec))):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            keep, size = [], 1
+            for a in axes:
+                if dim % (size * mesh.shape[a]) == 0:
+                    keep.append(a)
+                    size *= mesh.shape[a]
+            fixed.append(tuple(keep) if len(keep) > 1
+                         else (keep[0] if keep else None))
+        return P(*fixed)
+
+    specs = jax.tree.map(sanitize, specs, abstract,
+                         is_leaf=lambda x: isinstance(x, P))
+    return abstract, specs
+
+
+# ---------------------------------------------------------------------------
+# lowerable step builders
+# ---------------------------------------------------------------------------
+
+def sharded_arg_bytes(abstract_tree, spec_tree_, mesh: Mesh) -> int:
+    """Exact per-device bytes of the (sharded) arguments — authoritative
+    where the CPU backend's memory_analysis is not."""
+    total = 0
+    specs = jax.tree.leaves(spec_tree_, is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(abstract_tree)
+    assert len(specs) == len(leaves), (len(specs), len(leaves))
+    for leaf, spec in zip(leaves, specs):
+        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        div = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= mesh.shape[a]
+        total += -(-nbytes // max(1, div))
+    return total
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """A jit'd step + the abstract args to lower it with."""
+    fn: Any
+    args: Tuple[Any, ...]
+    arg_bytes_per_device: Optional[int] = None
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def build_train(arch_id: str, shape_name: str, mesh: Mesh,
+                cfg: Optional[ModelConfig] = None,
+                train_cfg: Optional[TrainConfig] = None) -> Lowerable:
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    train_cfg = train_cfg or default_train_config(arch_id, shape)
+    _, abs_p, p_specs = param_pack(cfg, mesh)
+    abs_opt, opt_specs = opt_pack(abs_p, p_specs, mesh, train_cfg.opt.eightbit)
+    abs_batch, b_specs = input_specs(cfg, shape, mesh)
+
+    step = make_train_step(cfg, train_cfg)
+    fn = jax.jit(
+        step,
+        in_shardings=(tree_named(mesh, p_specs), tree_named(mesh, opt_specs),
+                      tree_named(mesh, b_specs)),
+        out_shardings=(tree_named(mesh, p_specs),
+                       tree_named(mesh, opt_specs), None),
+        donate_argnums=(0, 1))
+    ab = sharded_arg_bytes((abs_p, abs_opt, abs_batch),
+                           (p_specs, opt_specs, b_specs), mesh)
+    return Lowerable(fn, (abs_p, abs_opt, abs_batch), ab)
+
+
+def build_prefill(arch_id: str, shape_name: str, mesh: Mesh,
+                  cfg: Optional[ModelConfig] = None) -> Lowerable:
+    from repro.serving.engine import prefill
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    s_tok = s - cfg.frontend_prefix
+    seq_all = b == 1
+    abs_cache, c_specs = cache_pack(cfg, mesh, b, s, seq_all=seq_all)
+    _, abs_p, p_specs = param_pack(cfg, mesh)
+
+    tokens = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+    t_spec = batch_spec(mesh, b, 1)
+    kwargs_abs = {}
+    kwargs_specs = {}
+    if cfg.frontend_prefix:
+        kwargs_abs["prefix_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_prefix, cfg.d_model), jnp.bfloat16)
+        kwargs_specs["prefix_embed"] = batch_spec(mesh, b, 2)
+    if cfg.encoder_layers:
+        kwargs_abs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        kwargs_specs["frames"] = batch_spec(mesh, b, 2)
+
+    def step(params, tokens, cache, kw):
+        return prefill(params, cfg, tokens, cache, **kw)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(tree_named(mesh, p_specs), named(mesh, t_spec),
+                      tree_named(mesh, c_specs),
+                      tree_named(mesh, kwargs_specs)),
+        donate_argnums=(2,))
+    ab = sharded_arg_bytes((abs_p, tokens, abs_cache, kwargs_abs),
+                           (p_specs, t_spec, c_specs, kwargs_specs), mesh)
+    return Lowerable(fn, (abs_p, tokens, abs_cache, kwargs_abs), ab)
+
+
+def build_decode(arch_id: str, shape_name: str, mesh: Mesh,
+                 cfg: Optional[ModelConfig] = None) -> Lowerable:
+    from repro.serving.engine import decode_step
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    seq_all = b == 1
+    abs_cache, c_specs = cache_pack(cfg, mesh, b, s, seq_all=seq_all)
+    _, abs_p, p_specs = param_pack(cfg, mesh)
+    tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.encoder_layers:
+        # enc-dec decode attends over the (precomputed) encoder output
+        enc_abs = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        enc_spec = batch_spec(mesh, b, 2)
+
+        def step(params, cache, tokens, pos, enc_out):
+            return decode_step(params, cfg, cache, tokens, pos,
+                               enc_out=enc_out)
+
+        fn = jax.jit(
+            step,
+            in_shardings=(tree_named(mesh, p_specs),
+                          tree_named(mesh, c_specs),
+                          named(mesh, batch_spec(mesh, b, 0)),
+                          named(mesh, P()), named(mesh, enc_spec)),
+            donate_argnums=(1,))
+        ab = sharded_arg_bytes(
+            (abs_p, abs_cache, tokens, pos, enc_abs),
+            (p_specs, c_specs, batch_spec(mesh, b, 0), P(), enc_spec), mesh)
+        return Lowerable(fn, (abs_p, abs_cache, tokens, pos, enc_abs), ab)
+
+    def step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(tree_named(mesh, p_specs), tree_named(mesh, c_specs),
+                      named(mesh, batch_spec(mesh, b, 0)), named(mesh, P())),
+        donate_argnums=(1,))
+    ab = sharded_arg_bytes(
+        (abs_p, abs_cache, tokens, pos),
+        (p_specs, c_specs, batch_spec(mesh, b, 0), P()), mesh)
+    return Lowerable(fn, (abs_p, abs_cache, tokens, pos), ab)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, **kw) -> Lowerable:
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return build_train(arch_id, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return build_prefill(arch_id, shape_name, mesh, **kw)
+    return build_decode(arch_id, shape_name, mesh, **kw)

@@ -1,0 +1,333 @@
+"""Core neural layers (pure JAX, config-driven, sharding-annotated).
+
+Norms, rotary embeddings, GQA attention (double-chunked online-softmax —
+the pure-JAX twin of the Pallas flash kernel, used by every lowering path),
+and the MLP family (SwiGLU / GeGLU / squared-ReLU / GELU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import RULES, logical_to_spec
+from .config import ModelConfig
+from .params import ParamDef
+
+NEG_INF = -1e30
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axes.
+
+    No-op without a mesh; mesh axes that do not evenly divide the
+    corresponding dimension are dropped (so the same model code lowers for
+    any batch/seq size — e.g. batch=1 long-context decode)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.axis_names:
+        return x
+    spec = logical_to_spec(logical, mesh)
+    fixed = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        size = 1
+        for a in axes:
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        fixed.append(tuple(keep) if len(keep) > 1
+                     else (keep[0] if keep else None))
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def constrain_seq(x: jax.Array) -> jax.Array:
+    """Sequence-parallel residual-stream constraint: (B, S, d) sharded
+    ("batch", "seq", None).  This is what bounds the remat-saved scan carry
+    to (B·S/|batch|/|model|)·d per device on the deep configs."""
+    return constrain(x, "batch", "seq", None)
+
+
+@jax.custom_vjp
+def grad_cast(x: jax.Array) -> jax.Array:
+    """Identity whose COTANGENT is cast to x's dtype (bf16 boundary for
+    gradients leaving an f32 softmax/norm region — without it the f32
+    attention cotangents flow into the projection backward dots and the
+    TP psums carry f32 instead of bf16; §Perf iteration 'gradcast')."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)     # dtype token (a valid JAX type)
+
+
+def _gc_bwd(token, ct):
+    return (ct.astype(token.dtype),)
+
+
+grad_cast.defvjp(_gc_fwd, _gc_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDef((d,), (None,), init="ones"),
+                "bias": ParamDef((d,), (None,), init="zeros")}
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def norm_apply(p, cfg: ModelConfig, x: jax.Array, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) \
+            + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, D) rotate-half RoPE at absolute ``positions`` (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (S, half)
+    cos = jnp.cos(ang)[None, None]
+    sin = jnp.sin(ang)[None, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Double-chunked attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0, q_chunk: int = 512,
+                      kv_chunk: int = 512,
+                      causal_skip: bool = False) -> jax.Array:
+    """Online-softmax attention, O(q_chunk·kv_chunk) live scores.
+
+    q (B, H, Sq, D); k/v (B, KV, Skv, D); GQA expands the KV *chunk* only.
+    ``causal_skip`` (§Perf) drops fully-masked (q, kv) chunk pairs from the
+    schedule instead of masking them — ~2× fewer attention FLOPs at long S.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+
+    def pick(n, target):
+        """Largest divisor of n that is ≤ target (whisper's 1500-frame
+        encoder and other non-power-of-2 lengths)."""
+        c = min(target, n)
+        while n % c:
+            c -= 1
+        return c
+
+    q_chunk = pick(sq, q_chunk)
+    kv_chunk = pick(skv, kv_chunk)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = d ** -0.5
+
+    qc = q.reshape(b, h, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def kv_step(carry, inputs, qi_pos):
+        m, l, acc = carry
+        kj, vj, kj_idx = inputs
+        kj = jnp.repeat(kj, group, axis=1)           # (B, H, ck, D)
+        vj = jnp.repeat(vj, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi_pos["q"], kj,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = qi_pos["pos"][:, None]                       # (cq, 1)
+        kpos = kj_idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum(-1, keepdims=True)
+        # P·V in the input dtype (bf16 on TPU) with f32 accumulation —
+        # flash-kernel discipline; halves the P/V dot traffic (§Perf C1)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    def q_block(qi, q_i):
+        pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        init = (jnp.full((b, h, q_chunk, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk, 1), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        qi_pos = {"q": q_i, "pos": pos}
+        skippable = causal_skip and causal and q_offset == 0
+        if skippable:
+            # §Perf: only kv chunks j ∈ [lo, qi] contribute — causality
+            # bounds the top, a sliding window additionally bounds the
+            # bottom (gemma3 local layers: 2 of 64 chunks live).  Static
+            # slicing isn't possible (bounds depend on qi), so use a
+            # fori_loop with dynamic chunk indexing.
+            if window is not None:
+                lo = jnp.maximum(
+                    0, (qi * q_chunk - (window - 1)) // kv_chunk)
+            else:
+                lo = 0
+
+            def body(j, carry):
+                kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+                vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+                carry, _ = kv_step(carry, (kj, vj, j), qi_pos)
+                return carry
+            m, l, acc = jax.lax.fori_loop(lo, qi + 1, body, init)
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, x: kv_step(c, x, qi_pos), init,
+                (kc, vc, jnp.arange(nk)))
+        safe = jnp.where(l == 0.0, 1.0, l)
+        return (acc / safe).astype(q.dtype)
+
+    if nq == 1:
+        out = q_block(0, qc[0])
+    else:
+        outs = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                           (jnp.arange(nq), qc))
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, *, cross: bool = False
+                   ) -> Dict[str, ParamDef]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wo": ParamDef((h * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((h * hd,), ("tp",), init="zeros")
+        defs["bk"] = ParamDef((kv * hd,), ("tp",), init="zeros")
+        defs["bv"] = ParamDef((kv * hd,), ("tp",), init="zeros")
+    return defs
+
+
+def attention_qkv(p, cfg: ModelConfig, x: jax.Array,
+                  kv_input: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to (q, k, v) with head layout (B, H, S, D)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_in = x if kv_input is None else kv_input
+    skv = kv_in.shape[1]
+    q = x @ p["wq"]
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, skv, kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, skv, kv, hd).transpose(0, 2, 1, 3)
+    q = constrain(q, "batch", "tp", None, None)
+    return q, k, v
+
+
+def attention_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                    kind: str = "attn", positions: Optional[jax.Array] = None,
+                    kv_input: Optional[jax.Array] = None,
+                    causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """Full attention block: qkv → rope → chunked flash → output proj.
+
+    kind: 'attn' (global) | 'attn_local' | 'attn_swa' — selects window and
+    (for gemma3) the RoPE theta.  ``kv_input`` switches to cross-attention
+    (no RoPE on kv, non-causal).
+    """
+    b, s, _ = x.shape
+    q, k, v = attention_qkv(p, cfg, x, kv_input)
+    window = None
+    theta = cfg.rope_theta
+    if kind == "attn_local":
+        window = cfg.local_window
+    elif kind == "attn_swa":
+        window = cfg.local_window
+    elif kind == "attn" and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+    is_cross = kv_input is not None
+    if not is_cross:
+        if positions is None:
+            positions = q_offset + jnp.arange(s)
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    # bf16 gradient boundary around the f32 softmax region (§Perf)
+    q, k, v = grad_cast(q), grad_cast(k), grad_cast(v)
+    out = chunked_attention(
+        q, k, v, causal=causal and not is_cross,
+        window=None if is_cross else window, q_offset=q_offset,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        causal_skip=cfg.causal_skip)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"]
+    return constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP family
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wg": ParamDef((d, ff), ("fsdp", "tp")),
+                "wu": ParamDef((d, ff), ("fsdp", "tp")),
+                "wd": ParamDef((ff, d), ("tp", "fsdp"))}
+    return {"wu": ParamDef((d, ff), ("fsdp", "tp")),
+            "wd": ParamDef((ff, d), ("tp", "fsdp"))}
+
+
+def mlp_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        hmid = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.act == "geglu":
+        hmid = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])
+    elif cfg.act == "sq_relu":
+        r = jnp.maximum(x @ p["wu"], 0)
+        hmid = r * r                       # nemotron squared-ReLU
+    else:
+        hmid = jax.nn.gelu(x @ p["wu"], approximate=True)
+    hmid = constrain(hmid, "batch", None, "tp")
+    return constrain(hmid @ p["wd"], "batch", None, None)

@@ -1,0 +1,214 @@
+"""LeNet-5 (paper §4.3) — the paper's demonstration workload.
+
+Architecture (LeCun et al. 1998, as the paper uses it):
+
+  L1 conv 1→6   k5  + ReLU + avgpool 2×2     (1,1,32,32) → (1,6,14,14)
+  L2 conv 6→16  k5  + ReLU + avgpool 2×2     → (1,16,5,5)
+  L3 conv 16→120 k5 + ReLU                   → (1,120,1,1)
+  L4 fc  120→84 + ReLU
+  L5 fc  84→10
+
+Two references live here:
+
+* ``lenet5_specs`` + ``reference_forward_int8`` — the exact integer
+  semantics of the VTA execution (int8 weights, int32 accumulate, static
+  power-of-2 requant, truncation).  The compiled network must match this
+  bit-for-bit.
+* ``reference_forward_float`` — a float32 JAX forward pass over the
+  dequantised weights, standing in for the paper's PyTorch reference model
+  (torch is not available here; recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.conv_lowering import conv2d_reference
+from repro.core.layer_compiler import LayerSpec
+
+
+@dataclasses.dataclass
+class LeNetWeights:
+    conv1_w: np.ndarray   # (6, 1, 5, 5)  int8
+    conv1_b: np.ndarray   # (6,)          int32
+    conv2_w: np.ndarray   # (16, 6, 5, 5)
+    conv2_b: np.ndarray
+    conv3_w: np.ndarray   # (120, 16, 5, 5)
+    conv3_b: np.ndarray
+    fc4_w: np.ndarray     # (120, 84)
+    fc4_b: np.ndarray
+    fc5_w: np.ndarray     # (84, 10)
+    fc5_b: np.ndarray
+
+
+def lenet5_random_weights(seed: int = 0, scale: int = 16) -> LeNetWeights:
+    """Deterministic int8 weights in a narrow range (so activations stay
+    well-behaved under the static power-of-2 requant discipline)."""
+    rng = np.random.default_rng(seed)
+    w = lambda *s: rng.integers(-scale, scale + 1, s, dtype=np.int64).astype(np.int8)
+    b = lambda n: rng.integers(-64, 65, (n,), dtype=np.int64).astype(np.int32)
+    return LeNetWeights(
+        conv1_w=w(6, 1, 5, 5), conv1_b=b(6),
+        conv2_w=w(16, 6, 5, 5), conv2_b=b(16),
+        conv3_w=w(120, 16, 5, 5), conv3_b=b(120),
+        fc4_w=w(120, 84), fc4_b=b(84),
+        fc5_w=w(84, 10), fc5_b=b(10),
+    )
+
+
+def lenet5_specs(weights: LeNetWeights,
+                 requant_shifts: Optional[Sequence[Optional[int]]] = None
+                 ) -> List[LayerSpec]:
+    """The five LayerSpecs of §4.3.  ``requant_shifts`` pins the per-layer
+    shifts (None entries = choose statically at compile time)."""
+    s = list(requant_shifts) if requant_shifts is not None else [None] * 5
+    return [
+        LayerSpec("l1_conv", "conv", weights.conv1_w, weights.conv1_b,
+                  relu=True, pool="avg2x2", requant_shift=s[0]),
+        LayerSpec("l2_conv", "conv", weights.conv2_w, weights.conv2_b,
+                  relu=True, pool="avg2x2", requant_shift=s[1]),
+        LayerSpec("l3_conv", "conv", weights.conv3_w, weights.conv3_b,
+                  relu=True, requant_shift=s[2]),
+        LayerSpec("l4_fc", "fc", weights.fc4_w, weights.fc4_b,
+                  relu=True, requant_shift=s[3]),
+        LayerSpec("l5_fc", "fc", weights.fc5_w, weights.fc5_b,
+                  relu=False, requant_shift=s[4]),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Integer reference (the semantics the VTA must match bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def _requant(acc: np.ndarray, pool_div: int, shift: int) -> np.ndarray:
+    out = acc >> (pool_div + shift)
+    return (out & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+
+
+def _avgpool_sum(t: np.ndarray) -> np.ndarray:
+    """Sum over 2×2 windows (division folded into the requant shift)."""
+    _, c, h, w = t.shape
+    return (t[:, :, 0::2, 0::2] + t[:, :, 0::2, 1::2]
+            + t[:, :, 1::2, 0::2] + t[:, :, 1::2, 1::2])
+
+
+def reference_forward_int8(weights: LeNetWeights, image: np.ndarray,
+                           shifts: Sequence[int]
+                           ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    """Bit-exact integer forward pass; returns (logits_int8 (1,10),
+    per-layer activations)."""
+    acts: Dict[str, np.ndarray] = {}
+    x = image.astype(np.int64)
+
+    def conv_block(x, w, b, shift, pool):
+        acc = conv2d_reference(x.astype(np.int8), w) + b[None, :, None, None]
+        acc = np.maximum(acc, 0)
+        if pool:
+            acc = _avgpool_sum(acc)
+            return _requant(acc, 2, shift).astype(np.int64)
+        return _requant(acc, 0, shift).astype(np.int64)
+
+    x = conv_block(x, weights.conv1_w, weights.conv1_b.astype(np.int64),
+                   shifts[0], True);  acts["l1"] = x.astype(np.int8)
+    x = conv_block(x, weights.conv2_w, weights.conv2_b.astype(np.int64),
+                   shifts[1], True);  acts["l2"] = x.astype(np.int8)
+    x = conv_block(x, weights.conv3_w, weights.conv3_b.astype(np.int64),
+                   shifts[2], False); acts["l3"] = x.astype(np.int8)
+
+    v = x.reshape(1, -1)                      # (1, 120)
+    acc = v @ weights.fc4_w.astype(np.int64) + weights.fc4_b.astype(np.int64)
+    acc = np.maximum(acc, 0)
+    v = _requant(acc, 0, shifts[3]).astype(np.int64); acts["l4"] = v.astype(np.int8)
+
+    acc = v @ weights.fc5_w.astype(np.int64) + weights.fc5_b.astype(np.int64)
+    logits = _requant(acc, 0, shifts[4]);  acts["l5"] = logits
+    return logits, acts
+
+
+# ---------------------------------------------------------------------------
+# Float reference (stands in for the paper's PyTorch model)
+# ---------------------------------------------------------------------------
+
+def reference_forward_float(weights: LeNetWeights, image: np.ndarray
+                            ) -> np.ndarray:
+    """Float32 JAX forward over the same (integer-valued) weights — the
+    classification reference; imported lazily so core/ stays JAX-free."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    x = jnp.asarray(image, jnp.float32)
+
+    def conv(x, w, b, pool):
+        y = lax.conv_general_dilated(
+            x, jnp.asarray(w, jnp.float32), (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        y = jnp.maximum(y + jnp.asarray(b, jnp.float32)[None, :, None, None], 0)
+        if pool:
+            y = (y[:, :, 0::2, 0::2] + y[:, :, 0::2, 1::2]
+                 + y[:, :, 1::2, 0::2] + y[:, :, 1::2, 1::2]) / 4.0
+        return y
+
+    x = conv(x, weights.conv1_w, weights.conv1_b, True)
+    x = conv(x, weights.conv2_w, weights.conv2_b, True)
+    x = conv(x, weights.conv3_w, weights.conv3_b, False)
+    v = x.reshape(1, -1)
+    v = jnp.maximum(v @ jnp.asarray(weights.fc4_w, jnp.float32)
+                    + jnp.asarray(weights.fc4_b, jnp.float32), 0)
+    logits = (v @ jnp.asarray(weights.fc5_w, jnp.float32)
+              + jnp.asarray(weights.fc5_b, jnp.float32))
+    return np.asarray(logits)
+
+
+def synthetic_digit(seed: int = 0) -> np.ndarray:
+    """A deterministic 32×32 int8 test image (MNIST-like dynamic range)."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 128, (1, 1, 32, 32), dtype=np.int64)
+    return img.astype(np.int8)
+
+
+def calibrate_shifts(weights: LeNetWeights, images: Sequence[np.ndarray],
+                     margin: int = 1) -> List[int]:
+    """Static per-layer requant shifts from a calibration set (§4.2
+    discipline: shifts are fixed at compile time; the margin bit guards
+    unseen inputs against int8 wrap-around).
+
+    Layer k's input depends on shifts < k, so calibration is sequential.
+    """
+    from repro.core.layer_compiler import (choose_requant_shift,
+                                           layer_matrices,
+                                           reference_layer_acc)
+    from repro.core.conv_lowering import avgpool2x2_plan, mat2tensor
+
+    specs = lenet5_specs(weights)
+    shifts: List[int] = []
+    currents = [np.asarray(img, np.int8) for img in images]
+    for spec in specs:
+        pool_div = 2 if spec.pool == "avg2x2" else 0
+        accs = []
+        geos = []
+        for cur in currents:
+            A, B, geo = layer_matrices(spec, cur)
+            plan = (avgpool2x2_plan(geo.out_h, geo.out_w)
+                    if spec.pool == "avg2x2" else None)
+            accs.append(reference_layer_acc(A, B, spec.bias, spec.relu, plan))
+            geos.append((geo, plan))
+        m = max(int(np.abs(a).max(initial=0)) for a in accs)
+        shift = choose_requant_shift(np.asarray([m]),
+                                     already_shifted=pool_div) + margin
+        shifts.append(shift)
+        # advance every calibration image through this layer
+        nxt = []
+        for acc, (geo, plan) in zip(accs, geos):
+            out = acc >> (pool_div + shift)
+            out = np.clip(out, -128, 127).astype(np.int8)   # margin holds
+            if spec.kind == "conv":
+                oh = plan.out_h if plan else geo.out_h
+                ow = plan.out_w if plan else geo.out_w
+                nxt.append(mat2tensor(out, oh, ow))
+            else:
+                nxt.append(out)
+        currents = nxt
+    return shifts

@@ -1,0 +1,148 @@
+"""Mamba-1 selective-state-space block (for the Jamba hybrid, arXiv:2403.19887).
+
+in_proj → causal depthwise conv → selective scan (data-dependent Δ, B, C)
+→ SiLU gate → out_proj.  Training/prefill use a **chunked associative
+scan** (log-depth within each chunk, recurrent carry across chunks, so the
+live ``(B, L, d_inner, d_state)`` tensor is bounded by the chunk length);
+decode is a single-step state update (O(1) memory — ``long_500k``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import constrain
+from .params import ParamDef
+
+MAMBA_CHUNK = 128
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": ParamDef((di, cfg.mamba_conv), ("tp", None), scale=0.5),
+        "conv_b": ParamDef((di,), ("tp",), init="zeros"),
+        "x_proj": ParamDef((di, r + 2 * ds), ("tp", None)),
+        "dt_w": ParamDef((r, di), (None, "tp")),
+        "dt_bias": ParamDef((di,), ("tp",), init="ones"),
+        "A_log": ParamDef((di, ds), ("tp", None), init="ones"),
+        "D": ParamDef((di,), ("tp",), init="ones"),
+        "out_proj": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d.  x (B,S,di); w (di,K); prev (B,K-1,di)."""
+    _, s, di = x.shape
+    k = w.shape[1]
+    pad = (jnp.zeros((x.shape[0], k - 1, di), x.dtype)
+           if prev is None else prev.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+K-1, di)
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.T[:, None, :].astype(jnp.float32),                 # (K, 1, di)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)[:, :s]
+
+
+def _ssm_params(p, cfg: ModelConfig, xc: jax.Array):
+    """xc (B,S,di) → (decay (B,S,di,ds), Bx (B,S,di,ds), C (B,S,ds))."""
+    ds = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    proj = xc @ p["x_proj"]                                  # (B,S,r+2ds)
+    dt, Bc, Cc = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_w"] + p["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, ds)
+    decay = jnp.exp(dt[..., None] * A[None, None])           # (B,S,di,ds)
+    Bx = (dt * xc.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]              # (B,S,di,ds)
+    return decay, Bx, Cc.astype(jnp.float32)
+
+
+def _scan_chunk(decay, bx, h0):
+    """Associative scan within one chunk; h0 (B,di,ds) carry."""
+    def combine(a, b):
+        (da, xa), (db, xb) = a, b
+        return (da * db, xb + db * xa)
+    d_cum, x_cum = jax.lax.associative_scan(
+        combine, (decay, bx), axis=1)
+    h = x_cum + d_cum * h0[:, None]                          # inject carry
+    return h, h[:, -1]
+
+
+def mamba_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                return_state: bool = False):
+    """x (B,S,d) → (B,S,d).  state = (conv_tail (B,K-1,di), h (B,di,ds))."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    conv_prev, h_prev = (None, None) if state is None else state
+
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "tp")
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], conv_prev)
+                     .astype(jnp.float32)).astype(x.dtype)
+
+    decay, bx, cc = _ssm_params(p, cfg, xc)
+
+    chunk = min(MAMBA_CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if h_prev is None:
+        h_prev = jnp.zeros((b, di, ds), jnp.float32)
+
+    dec_c = decay.reshape(b, nc, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(b, nc, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    cc_c = cc.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3)
+    xc_c = xc.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+
+    def step(h0, inp):
+        dc, bc, ccc, xcc = inp
+        hh, h_last = _scan_chunk(dc, bc, h0)
+        y = jnp.einsum("blds,bls->bld", hh, ccc)             # (B,L,di)
+        y = y + p["D"].astype(jnp.float32) * xcc.astype(jnp.float32)
+        return h_last, y
+
+    h_final, ys = jax.lax.scan(step, h_prev, (dec_c, bx_c, cc_c, xc_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = constrain(y @ p["out_proj"], "batch", None, None)
+    if return_state:
+        k = cfg.mamba_conv
+        prev = (jnp.zeros((b, k - 1, di), x_in.dtype)
+                if conv_prev is None else conv_prev.astype(x_in.dtype))
+        conv_tail = jnp.concatenate([prev, x_in], 1)[:, -(k - 1):]
+        return out, (conv_tail, h_final)
+    return out
+
+
+def mamba_decode_step(p, cfg: ModelConfig, x: jax.Array,
+                      state: Tuple[jax.Array, jax.Array]):
+    """Single token: x (B, d) + (conv_tail, h) → (out (B, d), new state)."""
+    out, new_state = mamba_apply(p, cfg, x[:, None], state=state,
+                                 return_state=True)
+    return out[:, 0], new_state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di = cfg.mamba_expand * cfg.d_model
+    return (jnp.zeros((batch, cfg.mamba_conv - 1, di), dtype),
+            jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32))

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch.
+
+GSPMD-friendly **group-local** factorised dispatch (DESIGN.md §4, and the
+§Perf hillclimb on mixtral):
+
+Tokens are first reshaped to (G, T/G) groups, where G is the mesh's
+batch-sharding extent — so every routing/cumsum/gather/scatter step has a
+leading group axis *sharded over data* and runs entirely shard-local.  The
+naive global formulation made XLA materialise and all-reduce the full
+(E, C_global, d) dispatch tensor per layer (~8 TB/step for mixtral train);
+group-local dispatch eliminates those collectives — only the expert FFN
+einsum's FSDP weight gathers remain.
+
+Per group:
+  1. router: top-k softmax gates per token;
+  2. slot assignment: position-in-expert via cumsum over the flattened
+     (slot-major) assignment list — first-choice assignments win capacity;
+  3. gather ``x[idx]`` → (E, C, d); batched expert FFN ``gecd,edf->gecf``;
+     scatter-add back with the gate weights.
+
+Capacity is per-group (= per data shard), as in deployed MoE systems;
+tokens beyond a group's capacity are dropped.  Aux losses: Switch-style
+load balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import constrain
+from .params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig, *, expert_parallel: bool = False
+             ) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    m = cfg.moe
+    e_ax = "expert" if expert_parallel else None
+    defs: Dict[str, ParamDef] = {
+        "router": ParamDef((d, m.n_experts), (None, None), scale=0.02),
+    }
+    ff = m.d_ff_expert
+    if cfg.act in ("swiglu", "geglu"):
+        defs["wg"] = ParamDef((m.n_experts, d, ff), (e_ax, "fsdp", "tp"))
+        defs["wu"] = ParamDef((m.n_experts, d, ff), (e_ax, "fsdp", "tp"))
+    else:
+        defs["wu"] = ParamDef((m.n_experts, d, ff), (e_ax, "fsdp", "tp"))
+    defs["wd"] = ParamDef((m.n_experts, ff, d), (e_ax, "tp", "fsdp"))
+    if m.n_shared_experts:
+        sff = ff * m.n_shared_experts
+        defs["shared_wg"] = ParamDef((d, sff), ("fsdp", "tp"))
+        defs["shared_wu"] = ParamDef((d, sff), ("fsdp", "tp"))
+        defs["shared_wd"] = ParamDef((sff, d), ("tp", "fsdp"))
+    return defs
+
+
+def _n_groups(t: int) -> int:
+    """Batch-sharding extent of the current mesh that divides t.
+
+    Group-local dispatch only pays off when each group still holds a
+    meaningful token count — decode steps (T = batch, e.g. 128 tokens)
+    regressed 3–4× with 8-token groups (measured, EXPERIMENTS.md §Perf),
+    so small batches keep the single-group dispatch (the tensors are tiny
+    there: T·d ≈ 1.6 MB for mixtral decode)."""
+    if t < 4096:
+        return 1
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and t % (g * mesh.shape[a]) == 0:
+            g *= mesh.shape[a]
+    return g
+
+
+def _expert_ffn(p, cfg: ModelConfig, xe: jax.Array) -> jax.Array:
+    """Batched expert FFN: xe (G, E, C, d) → (G, E, C, d)."""
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+        u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+        act = jax.nn.silu if cfg.act == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(g) * u
+    elif cfg.act == "sq_relu":
+        r = jnp.maximum(jnp.einsum("gecd,edf->gecf", xe, p["wu"]), 0)
+        h = r * r
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["wu"]),
+                        approximate=True)
+    h = constrain(h, "batch", None, None, "tp")
+    return jnp.einsum("gecf,efd->gecd", h, p["wd"])
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array, *,
+              capacity: Optional[int] = None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, S, d) → (same shape, aux-loss dict)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    n_g = _n_groups(t)
+    tg = t // n_g                                            # tokens/group
+    xt = constrain(x.reshape(n_g, tg, d), "batch", None, None)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, tg, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)    # (G, tg, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if capacity is None:
+        capacity = int(tg * m.top_k * m.capacity_factor / m.n_experts) or 1
+
+    # ---- slot assignment, per group (slot-major priority) ----
+    flat_expert = expert_ids.transpose(0, 2, 1).reshape(n_g, -1)  # (G, k·tg)
+    onehot = jax.nn.one_hot(flat_expert, m.n_experts, dtype=jnp.int32)
+    slot = jnp.cumsum(onehot, axis=1) - 1                    # (G, k·tg, E)
+    flat_slot = jnp.take_along_axis(
+        slot, flat_expert[..., None], axis=2)[..., 0]        # (G, k·tg)
+    keep = flat_slot < capacity
+    flat_token = jnp.tile(jnp.arange(tg), (n_g, m.top_k))
+    flat_gate = gate_vals.transpose(0, 2, 1).reshape(n_g, -1) * keep
+
+    # ---- index buffer (G, E, C): which local token feeds each slot ----
+    gidx = jnp.arange(n_g)[:, None]
+    s_clip = jnp.where(keep, flat_slot, capacity - 1)
+    idx = jnp.full((n_g, m.n_experts, capacity), tg, jnp.int32)
+    gates = jnp.zeros((n_g, m.n_experts, capacity), jnp.float32)
+    idx = idx.at[gidx, flat_expert, s_clip].set(
+        jnp.where(keep, flat_token, tg), mode="drop")
+    gates = gates.at[gidx, flat_expert, s_clip].set(
+        jnp.where(keep, flat_gate, 0.0), mode="drop")
+    idx = constrain(idx, "batch", None, None)
+    gates = constrain(gates, "batch", None, None)
+
+    # ---- dispatch / expert FFN / combine (all group-local) ----
+    xt_pad = jnp.concatenate([xt, jnp.zeros((n_g, 1, d), xt.dtype)], 1)
+    xe = jnp.take_along_axis(
+        xt_pad, idx.reshape(n_g, -1)[..., None], axis=1
+    ).reshape(n_g, m.n_experts, capacity, d)
+    xe = constrain(xe, "batch", None, None, None)
+    ye = _expert_ffn(p, cfg, xe)
+    ye = ye * gates[..., None].astype(ye.dtype)
+    out = jnp.zeros((n_g, tg + 1, d), ye.dtype)
+    out = out.at[gidx, idx.reshape(n_g, -1)].add(
+        ye.reshape(n_g, -1, d), mode="drop")
+    out = out[:, :tg]
+    out = constrain(out, "batch", None, None)
+
+    if m.n_shared_experts:
+        act = jax.nn.silu if cfg.act == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        if "shared_wg" in p:
+            h = act(xt @ p["shared_wg"]) * (xt @ p["shared_wu"])
+        else:
+            h = act(xt @ p["shared_wu"])
+        out = out + h @ p["shared_wd"]
+
+    # ---- aux losses (global means across groups) ----
+    density = jax.nn.one_hot(expert_ids[..., 0], m.n_experts).mean((0, 1))
+    router_prob = probs.mean((0, 1))
+    aux = {
+        "load_balance": (m.n_experts
+                         * jnp.sum(density * router_prob)).astype(jnp.float32),
+        "router_z": jnp.mean(
+            jax.nn.logsumexp(logits, axis=-1) ** 2).astype(jnp.float32),
+    }
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,225 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Time-mix with per-channel data-dependent decay ``w_t`` (LoRA-parameterised),
+bonus ``u``, token-shift lerps, per-head group-norm and SiLU gate; channel-
+mix with squared-ReLU.  Training/prefill run the **chunked-parallel WKV**
+(intra-chunk matmuls on the MXU + inter-chunk recurrent state), decode is a
+true O(1)-state recurrence (``long_500k`` runs with constant memory).
+
+The WKV recurrence per head (key dim = value dim = N):
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    o_t = r_tᵀ · (S_{t-1} + diag(u) k_t v_tᵀ)
+
+Chunked form (chunk L, log-space cumulated decays for stability):
+``r̃_t = r_t ⊙ A⁻_t``, ``k̃_i = k_i / A_i`` with ``A_t = Π_{s≤t} w_s``,
+intra-chunk scores ``r̃ k̃ᵀ`` strictly-lower-masked + ``u`` diagonal, and
+state carry ``S' = diag(A_L) S + (k ⊙ A_L/A_i)ᵀ v``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import constrain
+from .params import ParamDef
+
+W_LORA = 64
+
+
+def rwkv6_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    return {
+        # token-shift lerp coefficients (r, k, v, w, g)
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_v": ParamDef((d,), (None,), init="zeros"),
+        "mu_w": ParamDef((d,), (None,), init="zeros"),
+        "mu_g": ParamDef((d,), (None,), init="zeros"),
+        # projections
+        "wr": ParamDef((d, d), ("fsdp", "tp")),
+        "wk": ParamDef((d, d), ("fsdp", "tp")),
+        "wv": ParamDef((d, d), ("fsdp", "tp")),
+        "wg": ParamDef((d, d), ("fsdp", "tp")),
+        "wo": ParamDef((d, d), ("tp", "fsdp")),
+        # data-dependent decay (LoRA) + base, and the bonus u
+        "w_base": ParamDef((d,), (None,), init="zeros"),
+        "w1": ParamDef((d, W_LORA), ("fsdp", None), scale=0.01),
+        "w2": ParamDef((W_LORA, d), (None, "tp"), scale=0.01),
+        "u": ParamDef((h, n), (None, None), scale=0.5),
+        # per-head group norm
+        "ln_scale": ParamDef((d,), (None,), init="ones"),
+        "ln_bias": ParamDef((d,), (None,), init="zeros"),
+        # channel mix
+        "mu_ck": ParamDef((d,), (None,), init="zeros"),
+        "mu_cr": ParamDef((d,), (None,), init="zeros"),
+        "ck": ParamDef((d, cfg.d_ff), ("fsdp", "tp")),
+        "cv": ParamDef((cfg.d_ff, d), ("tp", "fsdp")),
+        "cr": ParamDef((d, d), ("fsdp", "tp")),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x (B,S,d) → x shifted right by one (x_{t-1}); prev fills t=0."""
+    pad = (jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None])
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def chunked_wkv(r, k, v, w, u, *, chunk: int = 64,
+                state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/v/w (B, H, S, N) — returns (out (B,H,S,N), final state (B,H,N,N)).
+
+    f32 throughout (decay ratios within a chunk stay representable for
+    chunk ≤ 64)."""
+    b, h, s, n = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-8, 1.0))        # (B,H,S,N) ≤ 0
+
+    rc = r.reshape(b, h, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+    lwc = lw.reshape(b, h, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), f32)
+
+    def step(S, inp):
+        rr, kk, vv, lww = inp                                # (B,H,L,N)
+        cum = jnp.cumsum(lww, axis=2)                        # A_t (incl. t)
+        a_incl = jnp.exp(cum)
+        a_excl = jnp.exp(cum - lww)                          # A_{t-1}·(≤1)
+        r_t = rr * a_excl
+        k_t = kk * jnp.exp(-cum)                             # k / A_t
+        # inter-chunk: r̃ @ S
+        inter = jnp.einsum("bhln,bhnm->bhlm", r_t, S)
+        # intra-chunk: strictly-lower scores + u-diagonal
+        scores = jnp.einsum("bhln,bhmn->bhlm", r_t, k_t)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhlm,bhmn->bhln", scores, vv)
+        diag = jnp.einsum("bhln,bhln->bhl", rr * u[None, :, None, :], kk)
+        intra = intra + diag[..., None] * vv
+        out = inter + intra
+        # state advance
+        a_total = jnp.exp(cum[:, :, -1])                     # (B,H,N)
+        k_scale = kk * jnp.exp(cum[:, :, -1:, :] - cum)      # k ⊙ A_L/A_t
+        S_new = S * a_total[..., None] + jnp.einsum(
+            "bhln,bhlm->bhnm", k_scale, vv)
+        return S_new, out
+
+    state, outs = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, n)
+    return out, state
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay w_t ∈ (0,1): exp(-exp(base + LoRA))."""
+    lora = jnp.tanh(xw @ p["w1"]) @ p["w2"]
+    return jnp.exp(-jnp.exp(
+        (p["w_base"] + lora).astype(jnp.float32)))
+
+
+def _group_norm(p, x: jax.Array, n: int, eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm over the flattened (B,S,d) with head groups."""
+    b, s, d = x.shape
+    xg = x.reshape(b, s, d // n, n).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(b, s, d) * p["ln_scale"].astype(jnp.float32) \
+        + p["ln_bias"].astype(jnp.float32)
+    return out
+
+
+def rwkv6_time_mix(p, cfg: ModelConfig, x: jax.Array, *,
+                   shift_prev: Optional[jax.Array] = None,
+                   wkv_state: Optional[jax.Array] = None,
+                   return_state: bool = False):
+    """x (B,S,d) → (B,S,d) [, (last_x, wkv_state)]."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    xs = _token_shift(x, shift_prev)
+    r = _lerp(x, xs, p["mu_r"]) @ p["wr"]
+    k = _lerp(x, xs, p["mu_k"]) @ p["wk"]
+    v = _lerp(x, xs, p["mu_v"]) @ p["wv"]
+    g = _lerp(x, xs, p["mu_g"]) @ p["wg"]
+    w = _decay(p, _lerp(x, xs, p["mu_w"]))                   # (B,S,d) f32
+
+    heads = lambda t: t.reshape(b, s, h, n).transpose(0, 2, 1, 3)
+    out, state = chunked_wkv(heads(r), heads(k), heads(v), heads(w),
+                             p["u"].astype(jnp.float32), state=wkv_state)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = _group_norm(p, out, n)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype) @ p["wo"]
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, (x[:, -1], state)
+    return out
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x: jax.Array, *,
+                      shift_prev: Optional[jax.Array] = None,
+                      return_state: bool = False):
+    xs = _token_shift(x, shift_prev)
+    xk = _lerp(x, xs, p["mu_ck"])
+    xr = _lerp(x, xs, p["mu_cr"])
+    kk = jnp.maximum(xk @ p["ck"], 0)
+    kk = kk * kk
+    kk = constrain(kk, "batch", None, "tp")
+    out = jax.nn.sigmoid((xr @ p["cr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (kk @ p["cv"])
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode step (serving)
+# ---------------------------------------------------------------------------
+
+def rwkv6_decode_step(p, cfg: ModelConfig, x: jax.Array,
+                      shift_prev: jax.Array, wkv_state: jax.Array,
+                      cm_shift_prev: jax.Array):
+    """Single-token recurrent step.  x (B, d); states threaded explicitly.
+
+    Returns (out (B, d) *time-mix only*, new (shift, wkv_state)); channel
+    mix is a separate call so the block wrapper can place the norms."""
+    out, (new_shift, new_state) = rwkv6_time_mix(
+        p, cfg, x[:, None], shift_prev=shift_prev, wkv_state=wkv_state,
+        return_state=True)
+    return out[:, 0], (new_shift, new_state)
+
+
+def rwkv6_channel_decode_step(p, cfg: ModelConfig, x: jax.Array,
+                              shift_prev: jax.Array):
+    out, new_shift = rwkv6_channel_mix(
+        p, cfg, x[:, None], shift_prev=shift_prev, return_state=True)
+    return out[:, 0], new_shift
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    return {
+        "shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

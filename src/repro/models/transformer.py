@@ -1,0 +1,248 @@
+"""Model assembly: decoder-only LMs, hybrids and encoder-decoders.
+
+The layer stack is expressed as (pattern × repeats) + tail: the smallest
+repeating period of the per-layer schedule is detected, parameters for each
+pattern position are *stacked* over the repeats, and the forward pass scans
+over the repeats (one trace of the pattern regardless of depth — a 96-layer
+dense model lowers as a single 1-layer trace).  Non-periodic tails apply as
+individual layers.  ``jax.checkpoint`` wraps the scanned body per the
+config's remat policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention_apply, attention_defs, constrain,
+                     constrain_seq, mlp_apply, mlp_defs, norm_apply,
+                     norm_defs)
+from .mamba import mamba_apply, mamba_defs
+from .moe import moe_apply, moe_defs
+from .params import ParamDef
+from .rwkv6 import (rwkv6_channel_mix, rwkv6_defs, rwkv6_time_mix)
+
+
+# ---------------------------------------------------------------------------
+# Schedule → (pattern, repeats, tail)
+# ---------------------------------------------------------------------------
+
+def schedule_items(cfg: ModelConfig) -> List[Tuple[str, bool]]:
+    return list(zip(cfg.layer_schedule(), cfg.moe_layers()))
+
+
+def find_period(items: List[Tuple[str, bool]]) -> Tuple[int, int, int]:
+    """Smallest (period, repeats, tail) with items = pattern×repeats + tail
+    and repeats ≥ 1."""
+    n = len(items)
+    for p in range(1, n + 1):
+        reps = n // p
+        body = items[:reps * p]
+        if all(body[i] == body[i % p] for i in range(len(body))):
+            tail_start = reps * p
+            if all(items[tail_start + j] == items[j]
+                   for j in range(n - tail_start)):
+                return p, reps, n - tail_start
+    return n, 1, 0
+
+
+# ---------------------------------------------------------------------------
+# Per-layer defs
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, kind: str, is_moe: bool, *,
+               cross: bool = False) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"norm1": norm_defs(cfg)}
+    if kind.startswith("attn"):
+        defs["mix"] = attention_defs(cfg)
+    elif kind == "rwkv6":
+        defs["mix"] = rwkv6_defs(cfg)
+    elif kind == "mamba":
+        defs["mix"] = mamba_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        defs["norm_x"] = norm_defs(cfg)
+        defs["cross"] = attention_defs(cfg, cross=True)
+    defs["norm2"] = norm_defs(cfg)
+    if kind != "rwkv6":                       # rwkv6 carries its channel mix
+        defs["ffn"] = moe_defs(cfg) if is_moe else mlp_defs(cfg)
+    return defs
+
+
+def block_apply(bp, cfg: ModelConfig, h: jax.Array, kind: str, is_moe: bool,
+                *, enc_out: Optional[jax.Array] = None, q_offset: int = 0
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One decoder layer; returns (h, moe_aux_scalar)."""
+    aux = jnp.zeros((), jnp.float32)
+    hin = norm_apply(bp["norm1"], cfg, h)
+    if kind.startswith("attn"):
+        mix = attention_apply(bp["mix"], cfg, hin, kind=kind,
+                              q_offset=q_offset)
+    elif kind == "rwkv6":
+        mix = rwkv6_time_mix(bp["mix"], cfg, hin)
+    elif kind == "mamba":
+        mix = mamba_apply(bp["mix"], cfg, hin)
+    else:
+        raise ValueError(kind)
+    h = h + mix
+    if enc_out is not None and "cross" in bp:
+        hx = norm_apply(bp["norm_x"], cfg, h)
+        h = h + attention_apply(bp["cross"], cfg, hx, kv_input=enc_out,
+                                causal=False)
+    hf = norm_apply(bp["norm2"], cfg, h)
+    if kind == "rwkv6":
+        h = h + rwkv6_channel_mix(bp["mix"], cfg, hf)
+    elif is_moe:
+        out, moe_aux = moe_apply(bp["ffn"], cfg, hf)
+        h = h + out
+        aux = aux + moe_aux["load_balance"] + 1e-3 * moe_aux["router_z"]
+    else:
+        h = h + mlp_apply(bp["ffn"], cfg, hf)
+    return constrain_seq(h), aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model defs
+# ---------------------------------------------------------------------------
+
+def _stack_defs(defs, k: int):
+    return jax.tree.map(
+        lambda d: ParamDef((k,) + d.shape, (None,) + d.logical,
+                           init=d.init, scale=d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    items = schedule_items(cfg)
+    cross = cfg.encoder_layers > 0
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_padded, d), ("tp", "fsdp"), scale=1.0),
+        "final_norm": norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((d, cfg.vocab_padded), ("fsdp", "tp"))
+
+    if cfg.scan_layers:
+        p, reps, tail = find_period(items)
+    else:
+        p, reps, tail = len(items), 1, 0
+    if reps > 1:
+        defs["blocks"] = [
+            _stack_defs(block_defs(cfg, kind, moe, cross=cross), reps)
+            for kind, moe in items[:p]]
+        defs["tail"] = [block_defs(cfg, kind, moe, cross=cross)
+                        for kind, moe in items[p * reps:]]
+    else:
+        defs["blocks"] = []
+        defs["tail"] = [block_defs(cfg, kind, moe, cross=cross)
+                        for kind, moe in items]
+
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, qkv_bias=False)
+        enc_block = {
+            "norm1": norm_defs(cfg), "mix": attention_defs(enc_cfg),
+            "norm2": norm_defs(cfg), "ffn": mlp_defs(cfg),
+        }
+        defs["encoder"] = {
+            "pos": ParamDef((cfg.encoder_seq, d), (None, "fsdp"), scale=0.02),
+            "blocks": _stack_defs(enc_block, cfg.encoder_layers),
+            "final_norm": norm_defs(cfg),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (the conv
+    frontend is a STUB per the assignment).  frames (B, T, d)."""
+    enc = params["encoder"]
+    h = frames + enc["pos"][None, :frames.shape[1]]
+    h = constrain(h, "batch", None, None)
+    enc_cfg = dataclasses.replace(cfg, qkv_bias=False)
+
+    def body(h, bp):
+        hin = norm_apply(bp["norm1"], cfg, h)
+        h = h + attention_apply(bp["mix"], enc_cfg, hin, causal=False)
+        hf = norm_apply(bp["norm2"], cfg, h)
+        h = h + mlp_apply(bp["ffn"], cfg, hf)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat_wrap(body, cfg), h, enc["blocks"])
+    return norm_apply(enc["final_norm"], cfg, h)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            prefix_embed: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            q_offset: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Token ids (B, S) [+ optional modality prefix embeddings (B, P, d)]
+    → (hidden states (B, S(+P), d), moe aux loss scalar)."""
+    items = schedule_items(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h.astype(params["embed"].dtype)
+    if prefix_embed is not None:
+        h = jnp.concatenate([prefix_embed.astype(h.dtype), h], axis=1)
+    h = constrain_seq(h)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    n_blocks = len(params["blocks"])
+    if n_blocks:
+        pattern = items[:n_blocks]
+
+        def body(carry, bp_slice):
+            h, aux = carry
+            for pos, (kind, moe) in enumerate(pattern):
+                h, a = block_apply(bp_slice[pos], cfg, h, kind, moe,
+                                   enc_out=enc_out, q_offset=q_offset)
+                aux = aux + a
+            return (h, aux), None
+
+        (h, aux_total), _ = jax.lax.scan(
+            _remat_wrap(body, cfg), (h, aux_total), params["blocks"])
+        tail_items = items[-len(params["tail"]):] if params["tail"] else []
+    else:
+        tail_items = items
+
+    for bp, (kind, moe) in zip(params["tail"], tail_items):
+        fn = _remat_wrap(
+            lambda h, bp=bp, kind=kind, moe=moe: block_apply(
+                bp, cfg, h, kind, moe, enc_out=enc_out, q_offset=q_offset),
+            cfg)
+        h, a = fn(h)
+        aux_total = aux_total + a
+
+    h = norm_apply(params["final_norm"], cfg, h)
+    return h, aux_total
+
+
+def unembed_logits(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """h (..., d) → logits (..., vocab_padded); vocab stays TP-sharded.
+    Padding columns (≥ vocab) are masked to -inf."""
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["unembed"]
+    if cfg.vocab_padded != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return constrain(logits, "batch", None, "vocab")

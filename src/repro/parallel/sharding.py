@@ -1,0 +1,116 @@
+"""Sharding rules: logical axes → mesh axes (DESIGN.md §4).
+
+The production mesh is ``(data, model)`` per pod (16×16) with an optional
+leading pure-DP ``pod`` axis.  Parameters are sharded over *both* axes
+(FSDP over ``data`` + tensor parallelism over ``model``); activations put
+batch on ``(pod, data)`` and the hidden/head dimension on ``model``.
+
+Logical axis names used by the model code:
+
+  "fsdp"    → ("data",)            ZeRO-3 style parameter sharding
+  "tp"      → ("model",)           tensor-parallel dimension
+  "batch"   → ("pod", "data")      data-parallel batch
+  "seq"     → ("model",)           sequence sharding (KV caches, SP norms)
+  "expert"  → ("data",)            expert parallelism (opt-in)
+  None      → replicated
+
+``logical_to_spec`` resolves a tuple of logical names against the axes the
+current mesh actually has, dropping mesh axes that don't exist (so the same
+model code lowers on 1-device smoke meshes, 2-D pods and 3-D multi-pod
+meshes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULES = {
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "expert": ("data",),
+    "vocab": ("model",),
+}
+
+
+def mesh_axis_names(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or get_abstract_mesh()
+    return tuple(mesh.axis_names)
+
+
+def get_abstract_mesh():
+    return jax.sharding.get_abstract_mesh()
+
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    mesh: Mesh) -> P:
+    """Resolve logical axis names to a PartitionSpec for ``mesh``."""
+    names = set(mesh.axis_names)
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+            continue
+        mapped = tuple(m for m in RULES[ax] if m in names)
+        if not mapped:
+            out.append(None)
+        elif len(mapped) == 1:
+            out.append(mapped[0])
+        else:
+            out.append(mapped)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_tree(logical_tree, mesh: Mesh):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda lg: logical_to_spec(lg, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def sharding_tree(logical_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        spec_tree(logical_tree, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def divisible(n: int, mesh: Mesh, axis: str) -> bool:
+    if axis not in mesh.axis_names:
+        return True
+    return n % mesh.shape[axis] == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Declarative mesh geometry (used by configs and the launcher)."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    def build(self) -> Mesh:
+        return jax.make_mesh(self.shape, self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+SINGLE_POD = MeshSpec((16, 16), ("data", "model"))
+MULTI_POD = MeshSpec((2, 16, 16), ("pod", "data", "model"))
+
+
+def smoke_mesh() -> Mesh:
+    """1-device mesh with the production axis names — model code paths are
+    identical, every spec resolves to replicated."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,137 @@
+"""KV-cache / recurrent-state containers for serving.
+
+Three cache kinds, chosen per layer from the architecture's schedule
+(DESIGN.md §4):
+
+* **dense**    — (B, KV, S_max, D) k/v, *sequence-sharded over the model
+  axis* ("seq") so a 32k×128-batch cache fits a pod (batch shards over
+  ``data``, sequence over ``model``); used by global-attention layers.
+* **windowed** — (B, KV, W, D) ring buffer with absolute-position slots;
+  used by SWA / local-attention layers (memory is O(window), which is what
+  makes ``long_500k`` runnable for mixtral/gemma3 local layers).
+* **recurrent**— Mamba (conv tail + SSM state) or RWKV-6 (shift + WKV
+  state): O(1) in sequence length.
+
+Caches are built with the same (pattern × repeats) stacking as the model
+parameters so the decode step scans over layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.mamba import mamba_init_state
+from repro.models.rwkv6 import rwkv6_init_state
+from repro.models.transformer import find_period, schedule_items
+
+
+def layer_cache_kind(cfg: ModelConfig, kind: str) -> str:
+    if kind == "attn":
+        return "dense"
+    if kind in ("attn_local", "attn_swa"):
+        return "windowed"
+    return kind                               # mamba | rwkv6
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ck = layer_cache_kind(cfg, kind)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if ck == "dense":
+        return {"k": jnp.zeros((batch, kv, max_seq, hd), dtype),
+                "v": jnp.zeros((batch, kv, max_seq, hd), dtype)}
+    if ck == "windowed":
+        w = min(cfg.local_window, max_seq)
+        return {"k": jnp.zeros((batch, kv, w, hd), dtype),
+                "v": jnp.zeros((batch, kv, w, hd), dtype),
+                "slot_pos": jnp.full((w,), -1, jnp.int32)}
+    if ck == "mamba":
+        conv, h = mamba_init_state(cfg, batch, dtype)
+        return {"conv": conv, "h": h}
+    if ck == "rwkv6":
+        return rwkv6_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def cache_logical(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    """Logical sharding of each cache leaf (resolved by launch code)."""
+    ck = layer_cache_kind(cfg, kind)
+    if ck == "dense":
+        return {"k": ("batch", None, "seq", None),
+                "v": ("batch", None, "seq", None)}
+    if ck == "windowed":
+        return {"k": ("batch", None, None, None),
+                "v": ("batch", None, None, None),
+                "slot_pos": (None,)}
+    if ck == "mamba":
+        return {"conv": ("batch", None, "tp"), "h": ("batch", "tp", None)}
+    if ck == "rwkv6":
+        return {"shift": ("batch", None), "wkv": ("batch", None, None, None),
+                "cm_shift": ("batch", None)}
+    raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class CacheTree:
+    """blocks: list (pattern position) of stacked caches (leading repeats
+    dim); tail: list of per-layer caches.  Mirrors params structure."""
+
+    blocks: List[Any]
+    tail: List[Any]
+
+
+def _stack(trees: List[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, *, enc_out: bool = False) -> CacheTree:
+    items = schedule_items(cfg)
+    if cfg.scan_layers:
+        p, reps, tail = find_period(items)
+    else:
+        p, reps, tail = len(items), 1, 0
+    if reps > 1:
+        blocks = [
+            _stack([init_layer_cache(cfg, items[pos][0], batch, max_seq,
+                                     dtype)
+                    for _ in range(reps)])
+            for pos in range(p)]
+        tail_caches = [init_layer_cache(cfg, kind, batch, max_seq, dtype)
+                       for kind, _ in items[p * reps:]]
+    else:
+        blocks = []
+        tail_caches = [init_layer_cache(cfg, kind, batch, max_seq, dtype)
+                       for kind, _ in items]
+    return CacheTree(blocks=blocks, tail=tail_caches)
+
+
+def cache_logical_tree(cfg: ModelConfig) -> CacheTree:
+    items = schedule_items(cfg)
+    if cfg.scan_layers:
+        p, reps, tail = find_period(items)
+    else:
+        p, reps, tail = len(items), 1, 0
+
+    def stacked(kind):
+        return jax.tree.map(lambda lg: (None,) + lg,
+                            cache_logical(cfg, kind),
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                a is None or isinstance(a, str) for a in x))
+
+    if reps > 1:
+        blocks = [stacked(items[pos][0]) for pos in range(p)]
+        tail = [cache_logical(cfg, kind) for kind, _ in items[p * reps:]]
+    else:
+        blocks = []
+        tail = [cache_logical(cfg, kind) for kind, _ in items]
+    return CacheTree(blocks=blocks, tail=tail)
+
+
+jax.tree_util.register_dataclass(
+    CacheTree, data_fields=["blocks", "tail"], meta_fields=[])

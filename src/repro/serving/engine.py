@@ -1,0 +1,324 @@
+"""Serving engine: prefill + single-token decode over the cache tree.
+
+``prefill``     — runs the prompt through the parallel (chunked-flash /
+chunked-WKV / chunked-scan) forward while *writing* each layer's cache;
+returns the last-position logits and the filled cache.
+
+``decode_step`` — one new token against the caches.  Global-attention
+layers read the sequence-sharded dense cache (GSPMD turns the softmax over
+the sharded sequence axis into the distributed flash-decode merge);
+windowed layers read the ring buffer; Mamba/RWKV layers advance their O(1)
+states.  The layer stack scans with the same (pattern × repeats) structure
+as training, so a 96-layer decode lowers as one pattern trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (attention_qkv, constrain,
+                                 constrain_seq, mlp_apply, norm_apply, rope)
+from repro.models.mamba import mamba_apply
+from repro.models.moe import moe_apply
+from repro.models.rwkv6 import rwkv6_channel_mix, rwkv6_time_mix
+from repro.models.transformer import (encode, find_period, schedule_items,
+                                      unembed_logits)
+from .cache import CacheTree, init_cache, layer_cache_kind
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention over caches
+# ---------------------------------------------------------------------------
+
+def _rope_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "attn" and cfg.rope_theta_global is not None:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _attn_scores_decode(cfg, q, k_cache, v_cache, mask):
+    """q (B,H,1,D); cache (B,KV,S,D); mask (S,) or (B,1,1,S) bool."""
+    group = cfg.n_heads // cfg.n_kv_heads
+    b, h, _, hd = q.shape
+    kv = cfg.n_kv_heads
+    qg = q.reshape(b, kv, group, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, 1, hd).astype(q.dtype)
+
+
+def attn_decode(bp, cfg: ModelConfig, kind: str, x: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, 1, d); returns (out (B, 1, d), updated cache)."""
+    b = x.shape[0]
+    theta = _rope_theta(cfg, kind)
+    q, k, v = attention_qkv(bp, cfg, x)
+    posv = jnp.full((1,), 0, jnp.int32) + pos
+    q = rope(q, posv, theta)
+    k = rope(k, posv, theta)
+
+    ck = layer_cache_kind(cfg, kind)
+    if ck == "dense":
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+        s_max = k_cache.shape[2]
+        mask = (jnp.arange(s_max) <= pos)[None, None, None, :]
+        o = _attn_scores_decode(cfg, q, k_cache, v_cache, mask)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:                                       # windowed ring buffer
+        w = cache["k"].shape[2]
+        slot = pos % w
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        valid = (slot_pos >= 0) & (pos - slot_pos < cfg.local_window)
+        o = _attn_scores_decode(cfg, q, k_cache, v_cache,
+                                valid[None, None, None, :])
+        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    out = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ bp["wo"], new_cache
+
+
+def attn_prefill(bp, cfg: ModelConfig, kind: str, x: jax.Array,
+                 cache: Dict[str, jax.Array], q_offset: int = 0
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Parallel attention over the prompt + cache write.  x (B, S, d)."""
+    from repro.models.layers import chunked_attention
+    b, s, _ = x.shape
+    theta = _rope_theta(cfg, kind)
+    q, k, v = attention_qkv(bp, cfg, x)
+    posv = q_offset + jnp.arange(s)
+    q = rope(q, posv, theta)
+    k = rope(k, posv, theta)
+    window = (cfg.local_window if kind in ("attn_local", "attn_swa")
+              else None)
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          q_offset=q_offset, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk,
+                          causal_skip=cfg.causal_skip)
+    ck = layer_cache_kind(cfg, kind)
+    if ck == "dense":
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), q_offset, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), q_offset, axis=2),
+        }
+    else:
+        w = cache["k"].shape[2]
+        take = min(w, s)
+        k_tail = k[:, :, -take:]
+        v_tail = v[:, :, -take:]
+        pos_tail = posv[-take:]
+        slots = pos_tail % w
+        new_cache = {
+            "k": cache["k"].at[:, :, slots].set(
+                k_tail.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, :, slots].set(
+                v_tail.astype(cache["v"].dtype)),
+            "slot_pos": cache["slot_pos"].at[slots].set(pos_tail),
+        }
+    out = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ bp["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Per-layer prefill / decode
+# ---------------------------------------------------------------------------
+
+def block_prefill(bp, cfg: ModelConfig, h, kind: str, is_moe: bool, cache,
+                  *, enc_out=None, q_offset: int = 0):
+    hin = norm_apply(bp["norm1"], cfg, h)
+    if kind.startswith("attn"):
+        mix, cache = attn_prefill(bp["mix"], cfg, kind, hin, cache,
+                                  q_offset=q_offset)
+    elif kind == "mamba":
+        mix, (conv, hs) = mamba_apply(bp["mix"], cfg, hin,
+                                      state=(cache["conv"], cache["h"]),
+                                      return_state=True)
+        cache = {"conv": conv, "h": hs}
+    elif kind == "rwkv6":
+        mix, (shift, wkv) = rwkv6_time_mix(
+            bp["mix"], cfg, hin, shift_prev=cache["shift"],
+            wkv_state=cache["wkv"], return_state=True)
+        cache = dict(cache, shift=shift, wkv=wkv)
+    else:
+        raise ValueError(kind)
+    h = h + mix
+    if enc_out is not None and "cross" in bp:
+        from repro.models.layers import attention_apply
+        hx = norm_apply(bp["norm_x"], cfg, h)
+        h = h + attention_apply(bp["cross"], cfg, hx, kv_input=enc_out,
+                                causal=False)
+    hf = norm_apply(bp["norm2"], cfg, h)
+    if kind == "rwkv6":
+        out, cm_shift = rwkv6_channel_mix(
+            bp["mix"], cfg, hf, shift_prev=cache["cm_shift"],
+            return_state=True)
+        cache = dict(cache, cm_shift=cm_shift)
+        h = h + out
+    elif is_moe:
+        out, _ = moe_apply(bp["ffn"], cfg, hf)
+        h = h + out
+    else:
+        h = h + mlp_apply(bp["ffn"], cfg, hf)
+    return constrain_seq(h), cache
+
+
+def block_decode(bp, cfg: ModelConfig, h, kind: str, is_moe: bool, cache,
+                 pos, *, enc_out=None):
+    hin = norm_apply(bp["norm1"], cfg, h)
+    if kind.startswith("attn"):
+        mix, cache = attn_decode(bp["mix"], cfg, kind, hin, cache, pos)
+    elif kind == "mamba":
+        mix, (conv, hs) = mamba_apply(bp["mix"], cfg, hin,
+                                      state=(cache["conv"], cache["h"]),
+                                      return_state=True)
+        cache = {"conv": conv, "h": hs}
+    elif kind == "rwkv6":
+        mix, (shift, wkv) = rwkv6_time_mix(
+            bp["mix"], cfg, hin, shift_prev=cache["shift"],
+            wkv_state=cache["wkv"], return_state=True)
+        cache = dict(cache, shift=shift, wkv=wkv)
+    else:
+        raise ValueError(kind)
+    h = h + mix
+    if enc_out is not None and "cross" in bp:
+        from repro.models.layers import attention_apply
+        hx = norm_apply(bp["norm_x"], cfg, h)
+        h = h + attention_apply(bp["cross"], cfg, hx, kv_input=enc_out,
+                                causal=False)
+    hf = norm_apply(bp["norm2"], cfg, h)
+    if kind == "rwkv6":
+        out, cm_shift = rwkv6_channel_mix(
+            bp["mix"], cfg, hf, shift_prev=cache["cm_shift"],
+            return_state=True)
+        cache = dict(cache, cm_shift=cm_shift)
+        h = h + out
+    elif is_moe:
+        out, _ = moe_apply(bp["ffn"], cfg, hf)
+        h = h + out
+    else:
+        h = h + mlp_apply(bp["ffn"], cfg, hf)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model prefill / decode
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig):
+    items = schedule_items(cfg)
+    if cfg.scan_layers:
+        p, reps, tail = find_period(items)
+    else:
+        p, reps, tail = len(items), 1, 0
+    if reps <= 1:
+        return [], items
+    return items[:p], items[p * reps:]
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: CacheTree,
+            *, prefix_embed=None, frames=None
+            ) -> Tuple[jax.Array, CacheTree]:
+    """Prompt (B, S) → (last-token logits (B, vocab), filled caches)."""
+    pattern, tail_items = _pattern(cfg)
+    enc_out = encode(params, cfg, frames) if cfg.encoder_layers else None
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embed is not None:
+        h = jnp.concatenate([prefix_embed.astype(h.dtype), h], axis=1)
+    h = constrain(h, "batch", None, None)
+
+    new_blocks = []
+    if pattern:
+        def body(h, xs):
+            bp_slice, cache_slice = xs
+            new_slice = []
+            for posn, (kind, moe) in enumerate(pattern):
+                h, c = block_prefill(bp_slice[posn], cfg, h, kind, moe,
+                                     cache_slice[posn], enc_out=enc_out)
+                new_slice.append(c)
+            return h, new_slice
+
+        h, new_blocks = jax.lax.scan(
+            body, h, (params["blocks"], cache.blocks))
+
+    new_tail = []
+    for bp, c, (kind, moe) in zip(params["tail"], cache.tail, tail_items):
+        h, c = block_prefill(bp, cfg, h, kind, moe, c, enc_out=enc_out)
+        new_tail.append(c)
+
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_logits(params, cfg, h[:, -1])
+    return logits, CacheTree(blocks=new_blocks, tail=new_tail)
+
+
+def decode_step(params, cfg: ModelConfig, cache: CacheTree,
+                tokens: jax.Array, pos: jax.Array, *, enc_out=None
+                ) -> Tuple[jax.Array, CacheTree]:
+    """One token per sequence.  tokens (B,), pos scalar int32 (position of
+    the new token).  Returns (logits (B, vocab), updated caches)."""
+    pattern, tail_items = _pattern(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None]
+
+    new_blocks = []
+    if pattern:
+        def body(h, xs):
+            bp_slice, cache_slice = xs
+            new_slice = []
+            for posn, (kind, moe) in enumerate(pattern):
+                h, c = block_decode(bp_slice[posn], cfg, h, kind, moe,
+                                    cache_slice[posn], pos, enc_out=enc_out)
+                new_slice.append(c)
+            return h, new_slice
+
+        h, new_blocks = jax.lax.scan(
+            body, h, (params["blocks"], cache.blocks))
+
+    new_tail = []
+    for bp, c, (kind, moe) in zip(params["tail"], cache.tail, tail_items):
+        h, c = block_decode(bp, cfg, h, kind, moe, c, pos, enc_out=enc_out)
+        new_tail.append(c)
+
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_logits(params, cfg, h[:, 0])
+    return logits, CacheTree(blocks=new_blocks, tail=new_tail)
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, n_tokens: int,
+             max_seq: int, *, dtype=jnp.bfloat16, frames=None,
+             prefix_embed=None) -> jax.Array:
+    """Greedy generation driver (examples / tests)."""
+    b, s = prompt.shape
+    cache = init_cache(cfg, b, max_seq, dtype)
+    logits, cache = prefill(params, cfg, prompt, cache, frames=frames,
+                            prefix_embed=prefix_embed)
+    enc_out = encode(params, cfg, frames) if cfg.encoder_layers else None
+    tokens = [jnp.argmax(logits, -1)]
+    pos = s + (prefix_embed.shape[1] if prefix_embed is not None else 0)
+
+    def step(carry, _):
+        tok, cache, pos = carry
+        logits, cache = decode_step(params, cfg, cache, tok, pos,
+                                    enc_out=enc_out)
+        nxt = jnp.argmax(logits, -1)
+        return (nxt, cache, pos + 1), nxt
+
+    (_, cache, _), toks = jax.lax.scan(
+        step, (tokens[0], cache, jnp.int32(pos)), None, length=n_tokens - 1)
+    return jnp.concatenate([tokens[0][None], toks], 0).T    # (B, n_tokens)

@@ -1,0 +1,57 @@
+"""Distributed-optimization tricks beyond plain GSPMD.
+
+``compressed_pod_allreduce`` — int8-compressed gradient all-reduce over the
+``pod`` axis (the slow inter-pod DCI links).  The mesh's in-pod axes keep
+their full-precision GSPMD reduce-scatter; only the pure-DP pod replica sum
+is compressed:
+
+  1. shared scale: pmax of the per-pod absmax (one f32 scalar per tensor);
+  2. quantise to ±63 (so an int8 wire sum of ≤2 pods cannot wrap; for
+     ``n_pods`` pods the clip is ±127/n_pods);
+  3. psum the int8 payload — 4× less inter-pod traffic than f32;
+  4. dequantise with the shared scale.
+
+Because GSPMD would otherwise reduce over ``pod`` implicitly, callers must
+arrange per-pod partial gradients — ``train_step`` does this by declaring
+the batch sharded over pod while the compression runs inside shard_map with
+the pod axis manual and every other axis auto.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _compress_body(n_pods: int, g: jax.Array) -> jax.Array:
+    limit = max(1, 127 // n_pods)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g.astype(jnp.float32))), "pod")
+    scale = jnp.maximum(scale, 1e-12) / limit
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                 -limit, limit).astype(jnp.int8)
+    s = jax.lax.psum(q, "pod")
+    return (s.astype(jnp.float32) * scale / n_pods).astype(g.dtype)
+
+
+def compressed_pod_allreduce(grads: Any) -> Any:
+    """Mean-reduce gradients over the pod axis with int8 wire format.
+
+    No-op when the mesh has no pod axis.  Inputs are per-pod partials
+    (pod-sharded batch ⇒ vma-unreduced grads); output is the pod mean.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "pod" not in mesh.axis_names:
+        return grads
+    n_pods = mesh.shape["pod"]
+    auto = frozenset(n for n in mesh.axis_names if n != "pod")
+
+    fn = jax.shard_map(
+        lambda g: jax.tree.map(
+            functools.partial(_compress_body, n_pods), g),
+        mesh=mesh, in_specs=P("pod"), out_specs=P(),
+        check_vma=False, axis_names={"pod"})
+    return fn(grads)

@@ -1,0 +1,47 @@
+"""Losses.  Chunked cross-entropy: the (B, S, vocab) logits tensor is never
+materialised — the sequence axis is scanned in chunks and the vocab axis
+stays TP-sharded, so peak live memory is (B, chunk, vocab/tp)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import unembed_logits
+from repro.models.layers import constrain
+
+
+def chunked_softmax_xent(params, cfg: ModelConfig, h: jax.Array,
+                         labels: jax.Array, *, chunk: int = 512,
+                         mask: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """h (B, S, d), labels (B, S) → (mean nll, mean accuracy)."""
+    b, s, _ = h.shape
+    chunk = min(chunk, s)
+    while s % chunk:            # largest divisor of s ≤ chunk (VLM: 3840)
+        chunk -= 1
+    nc = s // chunk
+    hc = h.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = (jnp.ones((nc, b, chunk), bool) if mask is None
+          else mask.reshape(b, nc, chunk).transpose(1, 0, 2))
+
+    def body(carry, inp):
+        nll_sum, correct, count = carry
+        hh, ll, mm = inp
+        logits = unembed_logits(params, cfg, hh).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mm
+        pred = logits.argmax(-1)
+        return (nll_sum + nll.sum(),
+                correct + ((pred == ll) & mm).sum(),
+                count + mm.sum()), None
+
+    (nll_sum, correct, count), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.int32(0), jnp.int32(0)), (hc, lc, mc))
+    count = jnp.maximum(count, 1)
+    return nll_sum / count, correct / count

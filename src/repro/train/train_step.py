@@ -1,0 +1,109 @@
+"""Training step factory: microbatched gradient accumulation + AdamW.
+
+The global batch is split into ``microbatches`` along the batch axis and
+scanned; gradients accumulate in ``grad_accum_dtype`` (f32 by default,
+bf16 for the ≥300B configs where the f32 accumulator wouldn't fit).
+Collectives amortise: GSPMD reduce-scatters the accumulated gradient once
+per step, not per microbatch.  The optional int8-compressed inter-pod
+gradient all-reduce lives in train/distributed.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import encode, forward
+from repro.optim import adamw
+from .losses import chunked_softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    loss_chunk: int = 512
+    moe_aux_weight: float = 1e-2
+    grad_accum_dtype: Any = jnp.float32
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    grad_compression: Optional[str] = None    # None | "int8_pod"
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            train_cfg: TrainConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, batch["frames"])
+    prefix = batch.get("prefix_embed")
+    h, aux = forward(params, cfg, batch["tokens"], enc_out=enc_out,
+                     prefix_embed=prefix)
+    if prefix is not None:
+        h = h[:, prefix.shape[1]:]        # loss over token positions only
+    nll, acc = chunked_softmax_xent(params, cfg, h, batch["labels"],
+                                    chunk=train_cfg.loss_chunk)
+    loss = nll + train_cfg.moe_aux_weight * aux
+    return loss, {"nll": nll, "accuracy": acc, "moe_aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, train_cfg: TrainConfig):
+    """Returns ``train_step(params, opt_state, batch) → (params, opt_state,
+    metrics)`` — jit it with the param/batch shardings (launch/train.py)."""
+
+    if cfg.causal_skip:
+        # the fori_loop chunk-skip has dynamic trip counts — not reverse-
+        # differentiable; training always uses the masked scan
+        cfg = dataclasses.replace(cfg, causal_skip=False)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, train_cfg), has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        m = train_cfg.microbatches
+
+        def reshape(x):
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, train_cfg.grad_accum_dtype), params)
+
+        def body(carry, mb):
+            g_acc, loss_acc, met_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(train_cfg.grad_accum_dtype),
+                g_acc, grads)
+            met_acc = jax.tree.map(lambda a, x: a + x, met_acc, metrics)
+            return (g_acc, loss_acc + loss, met_acc), None
+
+        met0 = {"nll": jnp.float32(0), "accuracy": jnp.float32(0),
+                "moe_aux": jnp.float32(0)}
+        (g_acc, loss, metrics), _ = jax.lax.scan(
+            body, (g0, jnp.float32(0), met0), micro)
+        inv = 1.0 / m
+        return loss * inv, jax.tree.map(lambda x: x * inv, metrics), \
+            jax.tree.map(lambda g: g * inv, g_acc)
+
+    def train_step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        if train_cfg.grad_compression == "int8_pod":
+            from .distributed import compressed_pod_allreduce
+            grads = compressed_pod_allreduce(grads)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            train_cfg.opt, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

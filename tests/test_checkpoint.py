@@ -1,0 +1,94 @@
+"""Checkpointing: atomicity, keep-K GC, async overlap, elastic restore."""
+
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32)},
+        "step": jnp.int32(7),
+        "nested": [jnp.arange(4), jnp.ones((2, 2), jnp.bfloat16)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = _tree()
+    ck.save(3, tree)
+    assert ck.latest_step() == 3
+    out = ck.restore(3, tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save_and_wait(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = _tree()
+    ck.save_async(1, tree)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_keep_k_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.complete_steps() == [3, 4]
+
+
+def test_atomicity_partial_write_ignored(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    ck.save(5, _tree())
+    # a crashed mid-write leaves a .tmp dir: must be invisible + GC'd
+    crash = tmp_path / "step_0000000009.tmp"
+    crash.mkdir()
+    (crash / "leaf_00000.npy").write_bytes(b"garbage")
+    assert ck.latest_step() == 5
+    ck.save(6, _tree())
+    assert not crash.exists()
+
+
+def test_corrupt_manifest_is_not_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    ck.save(5, _tree())
+    broken = tmp_path / "step_0000000007"
+    broken.mkdir()                      # no manifest inside
+    assert ck.latest_step() == 5
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"w": jnp.zeros((5, 4))})
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    """Save under one sharding, restore under another (1-device CPU here;
+    the mechanism — full-array leaves + caller-provided shardings — is
+    device-count independent)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ck = Checkpointer(tmp_path, keep=1)
+    with jax.set_mesh(mesh1):
+        ck.save(1, tree)
+    # "new cluster": different mesh shape (1×1 is all CPU offers, but the
+    # sharding object is re-derived, which is the elastic code path)
+    mesh2 = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh2, P("data", None))}
+    out = ck.restore(1, tree, shardings)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding == shardings["w"]

@@ -1,0 +1,65 @@
+"""Tensor→matrix lowering tests (paper §4.1, Def. 3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conv_lowering import (avgpool2x2_plan, conv2d_reference,
+                                      im2row, ker2col, mat2tensor,
+                                      tensor2mat, flatten_tensor)
+
+
+def test_lenet_layer1_shapes_verbatim():
+    """§4.3: (1,1,32,32) with 5×5 kernels → 784×25 input matrix."""
+    t = np.zeros((1, 1, 32, 32), dtype=np.int8)
+    A = im2row(t, 5, 5)
+    assert A.shape == (784, 25)
+    w = np.zeros((6, 1, 5, 5), dtype=np.int8)
+    B = ker2col(w)
+    assert B.shape == (25, 6)
+    # output 784×6 → tensor (1,6,28,28); after pooling 196×6 → (1,6,14,14)
+    C = np.zeros((784, 6), dtype=np.int8)
+    assert mat2tensor(C, 28, 28).shape == (1, 6, 28, 28)
+    assert mat2tensor(np.zeros((196, 6), np.int8), 14, 14).shape == (1, 6, 14, 14)
+
+
+@given(c=st.integers(1, 4), h=st.integers(3, 12), w=st.integers(3, 12),
+       f=st.integers(1, 5), k=st.integers(1, 3), stride=st.integers(1, 2),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=60, deadline=None)
+def test_def3_property(c, h, w, f, k, stride, seed):
+    """Def. 3: mat2tensor(im2row(T_A) × ker2col(T_B)) == T_A ⊛ T_B."""
+    if k > min(h, w):
+        k = min(h, w)
+    rng = np.random.default_rng(seed)
+    T_A = rng.integers(-64, 64, (1, c, h, w), dtype=np.int64).astype(np.int8)
+    T_B = rng.integers(-64, 64, (f, c, k, k), dtype=np.int64).astype(np.int8)
+    A = im2row(T_A, k, k, stride)
+    B = ker2col(T_B)
+    C = A.astype(np.int64) @ B.astype(np.int64)
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    T_C = mat2tensor(C, oh, ow)
+    np.testing.assert_array_equal(T_C, conv2d_reference(T_A, T_B, stride))
+
+
+@given(f=st.integers(1, 6), h=st.integers(1, 8), w=st.integers(1, 8),
+       seed=st.integers(0, 1000))
+@settings(max_examples=40)
+def test_mat2tensor_tensor2mat_inverse(f, h, w, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(-128, 128, (h * w, f), dtype=np.int64).astype(np.int8)
+    np.testing.assert_array_equal(tensor2mat(mat2tensor(m, h, w)), m)
+
+
+def test_flatten_is_nchw_order():
+    t = np.arange(2 * 3 * 4, dtype=np.int8).reshape(1, 2, 3, 4)
+    np.testing.assert_array_equal(flatten_tensor(t)[0], np.arange(24))
+
+
+def test_avgpool_plan_indices():
+    plan = avgpool2x2_plan(4, 4)
+    assert plan.out_h == plan.out_w == 2
+    assert plan.keep_rows == (0, 2, 8, 10)
+    # first window accumulates rows 1, 4, 5 into row 0
+    assert plan.add_pairs[:3] == ((0, 1), (0, 4), (0, 5))
+    assert plan.shr_indices == plan.keep_rows

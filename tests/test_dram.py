@@ -1,0 +1,70 @@
+"""DRAM allocator tests — paper §2.2 Fig. 2 verbatim + Def. 1 properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram import DramAllocator
+
+
+def test_fig2_example_verbatim():
+    """Fig. 2: offset 0; first 256-B allocation lands on page 1 (@1000);
+    second 4352-B allocation lands on page 2 (@2000–@30FF)."""
+    alloc = DramAllocator(offset=0, page_bytes=4096)
+    r1 = alloc.alloc("first", "inp", struct_bytes=16, count=16)   # 256 B
+    assert r1.phys_addr == 0x1000
+    assert r1.end == 0x1100
+    r2 = alloc.alloc("wgt17", "wgt", struct_bytes=256, count=17)  # 4352 B
+    assert r2.phys_addr == 0x2000
+    assert r2.end == 0x3100
+    # §2.2: logical address of the first WGT matrix = @2000/256 = @0020
+    assert r2.logical_addr(offset=0) == 0x20
+
+
+def test_def1_logical_addressing():
+    alloc = DramAllocator(offset=0x8000, page_bytes=4096)
+    r = alloc.alloc("inp", "inp", struct_bytes=16, count=32)
+    # log = (phy - offset) // (precision · nb_elem)
+    assert r.logical_addr(0x8000) == (r.phys_addr - 0x8000) // 16
+    # consecutive logical addresses = consecutive structures
+    assert r.logical_of(1, 0x8000) == r.logical_addr(0x8000) + 1
+
+
+def test_every_allocation_starts_fresh_page():
+    alloc = DramAllocator()
+    a = alloc.alloc("a", "inp", 16, 1)     # 16 bytes
+    b = alloc.alloc("b", "inp", 16, 1)
+    assert b.phys_addr - a.phys_addr == 4096
+
+
+@given(sizes=st.lists(st.tuples(st.integers(1, 512), st.integers(1, 64)),
+                      min_size=1, max_size=20))
+@settings(max_examples=50)
+def test_allocations_never_overlap_and_are_aligned(sizes):
+    alloc = DramAllocator()
+    regions = [alloc.alloc(f"r{i}", "inp", sb, c)
+               for i, (sb, c) in enumerate(sizes)]
+    for i, r in enumerate(regions):
+        # Def.-1 exactness: struct-aligned start ⇒ exact logical addresses
+        assert r.phys_addr % r.struct_bytes == 0
+        if 4096 % r.struct_bytes == 0:
+            assert r.phys_addr % 4096 == 0    # paper's page rule holds
+        for other in regions[i + 1:]:
+            assert r.end <= other.phys_addr   # strictly increasing
+    assert alloc.image_size() >= max(r.end for r in regions)
+
+
+def test_struct_alignment_beyond_page():
+    """TPU profile: 16 KiB WGT structures must start struct-aligned even
+    though that exceeds the 4 KiB page (DESIGN.md §2)."""
+    alloc = DramAllocator()
+    alloc.alloc("inp", "inp", 128, 512)
+    wgt = alloc.alloc("wgt", "wgt", 128 * 128, 4)
+    assert wgt.phys_addr % (128 * 128) == 0
+    assert wgt.logical_addr(0) * 128 * 128 == wgt.phys_addr
+
+
+def test_duplicate_name_rejected():
+    alloc = DramAllocator()
+    alloc.alloc("x", "inp", 16, 1)
+    with pytest.raises(ValueError):
+        alloc.alloc("x", "inp", 16, 1)

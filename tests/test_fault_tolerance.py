@@ -1,0 +1,146 @@
+"""Fault-tolerance: failure injection → restart → bit-identical trajectory;
+watchdog deadline; straggler accounting; deterministic data pipeline."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, host_batch, make_global_batch
+from repro.runtime.fault_tolerance import (FailureInjector, StepTimeout,
+                                           StragglerStats, Watchdog,
+                                           resilient_train_loop)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism (what makes restart exact)
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_shardable():
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=8, seed=3)
+    a = host_batch(cfg, step=5, lo=0, hi=8)
+    b = host_batch(cfg, step=5, lo=0, hi=8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # shard [2, 6) must equal the same rows of the full batch
+    shard = host_batch(cfg, step=5, lo=2, hi=6)
+    np.testing.assert_array_equal(shard["tokens"], a["tokens"][2:6])
+    # different steps differ
+    c = host_batch(cfg, step=6, lo=0, hi=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token
+    np.testing.assert_array_equal(
+        a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_global_batch_construction():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=4, seed=0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    batch = make_global_batch(cfg, 0, mesh)
+    assert batch["tokens"].shape == (4, 16)
+    ref = host_batch(cfg, 0, 0, 4)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]), ref["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# the resilient loop
+# ---------------------------------------------------------------------------
+
+def _counter_loop(tmp_path, fail_at, total=20, ckpt_every=5):
+    """A deterministic 'training' whose state is a running hash of steps."""
+    trace = []
+
+    def step_fn(state, step):
+        new = {"acc": (state["acc"] * 31 + step + 1) % 1_000_003}
+        trace.append(step)
+        return new
+
+    report = resilient_train_loop(
+        state={"acc": 0},
+        step_fn=step_fn,
+        save_tree_fn=lambda s: {"acc": jnp.int32(s["acc"])},
+        restore_fn=lambda ck, st, s: {"acc": int(
+            np.asarray(ck.restore(st, {"acc": jnp.int32(0)})["acc"]))},
+        checkpointer=Checkpointer(tmp_path, keep=3),
+        total_steps=total, ckpt_every=ckpt_every,
+        failure_injector=FailureInjector(fail_at),
+    )
+    return report, trace
+
+
+def test_failure_recovery_exact_state(tmp_path):
+    clean, _ = _counter_loop(tmp_path / "clean", [])
+    faulty, _ = _counter_loop(tmp_path / "faulty", [7, 13])
+    assert faulty.restarts == 2
+    assert faulty.final_step == clean.final_step == 20
+    # final checkpoint content identical with/without failures
+    a = Checkpointer(tmp_path / "clean").restore(20, {"acc": jnp.int64(0)})
+    b = Checkpointer(tmp_path / "faulty").restore(20, {"acc": jnp.int64(0)})
+    assert int(np.asarray(a["acc"])) == int(np.asarray(b["acc"]))
+
+
+def test_too_many_failures_raises(tmp_path):
+    # a hard failure (same step failing 7×) exhausts max_restarts=5
+    with pytest.raises(RuntimeError):
+        _counter_loop(tmp_path, [3] * 7, total=5)
+
+
+def test_restart_resumes_from_latest(tmp_path):
+    report, trace = _counter_loop(tmp_path, [12])
+    # failure hits before step 12 runs; restore to ckpt @10 replays 10, 11
+    assert trace.count(10) == 2 and trace.count(11) == 2
+    assert trace.count(12) == 1
+    assert report.restarts == 1
+
+
+def test_watchdog_trips():
+    w = Watchdog(deadline_s=0.1)
+    try:
+        w.arm()
+        time.sleep(0.3)
+        with pytest.raises(StepTimeout):
+            w.check()
+    finally:
+        w.stop()
+
+
+def test_watchdog_ok_within_deadline():
+    w = Watchdog(deadline_s=5.0)
+    try:
+        w.arm()
+        w.check()
+        w.disarm()
+    finally:
+        w.stop()
+
+
+def test_straggler_accounting():
+    s = StragglerStats()
+    for _ in range(10):
+        s.update(0.1)
+    assert s.slow_steps == 0
+    s.update(1.0)        # 10× the EWMA
+    assert s.slow_steps == 1
+    assert s.ewma_s < 0.2   # slow step barely moves the EWMA
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: tiny model, loss trajectory identical across failures
+# ---------------------------------------------------------------------------
+
+def test_training_trajectory_identical_after_restart(tmp_path):
+    from repro.configs import get_smoke
+    from repro.launch.train import train
+
+    cfg = get_smoke("lm100m")
+    kw = dict(steps=8, global_batch=2, seq_len=32, ckpt_every=2,
+              log_every=0)
+    clean = train(cfg, ckpt_dir=tmp_path / "a", **kw)
+    faulty = train(cfg, ckpt_dir=tmp_path / "b", fail_at=[5], **kw)
+    assert faulty.restarts == 1
+    la = [m["loss"] for m in clean.metrics_history]
+    lb = [m["loss"] for m in faulty.metrics_history if m["step"] > 4]
+    # last-step loss identical to fp32 exactness after replay
+    np.testing.assert_allclose(la[-1], lb[-1], rtol=1e-5)

@@ -1,0 +1,162 @@
+"""Matrix-op compiler tests (paper §3.3/§3.4) — compiled programs are run on
+the bit-accurate functional simulator and checked against the numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
+                                      compile_matmul, plan_chunks)
+from repro.core.hwconfig import VTAConfig, vta_default, vta_tpu
+from repro.core.simulator import (FunctionalSimulator, VTAHazardError,
+                                  run_program, verify_program)
+
+
+def test_section_3_4_worked_example():
+    """§3.4 verbatim: 16×16 × 16×16 + ReLU → single UOP at buffer @1 with
+    all fields 0; LP_OUT=1, LP_IN=16, UOP_BEGIN=1, UOP_END=2."""
+    rng = np.random.default_rng(34)
+    A = rng.integers(-128, 128, (16, 16), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-128, 128, (16, 16), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu()])
+
+    gemms = [i for i in prog.instructions
+             if isinstance(i, isa.GemInsn) and not i.reset]
+    assert len(gemms) == 1
+    g = gemms[0]
+    assert (g.iter_out, g.iter_in) == (1, 16)          # LP_OUT=1, LP_IN=16
+    assert (g.uop_bgn, g.uop_end) == (1, 2)            # ε=1
+    uop = prog.uops[1]
+    assert (uop.acc_idx, uop.inp_idx, uop.wgt_idx) == (0, 0, 0)
+    # reset uop at @0 (§3.4 "First, the VTA is reset; this requires a UOP
+    # located at address @0")
+    assert (prog.uops[0].acc_idx, prog.uops[0].inp_idx) == (0, 0)
+    # the GeMM performs 16 loops; ReLU zeroes negatives
+    report = verify_program(prog)
+    assert report.gemm_loops == 16
+    out, _ = run_program(prog)
+    ref = np.maximum(A.astype(np.int64) @ B.astype(np.int64), 0)
+    np.testing.assert_array_equal(
+        out, (ref & 0xFF).astype(np.uint8).view(np.int8))
+
+
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+       seed=st.integers(0, 2**16), use_x=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_matmul_property(m, k, n, seed, use_x):
+    """C = A·B (+X) for random shapes — simulator must equal the oracle."""
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-128, 128, (m, k), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-128, 128, (k, n), dtype=np.int64).astype(np.int8)
+    X = (rng.integers(-10**6, 10**6, (m, n), dtype=np.int64).astype(np.int32)
+         if use_x else None)
+    prog = compile_matmul(A, B, X=X)
+    verify_program(prog)
+
+
+@given(m=st.integers(2, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_alu_postops_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-32, 32, (m, k), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-32, 32, (k, n), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu(), AluImmOp.shr(3),
+                                         AluImmOp(isa.AluOp.MIN, 100),
+                                         AluImmOp(isa.AluOp.ADD, -5)])
+    verify_program(prog)
+
+
+def test_multi_chunk_exercises_buffer_limits():
+    """§3.3: 'If the data do not fit into the buffers, steps 2 to 5 must be
+    repeated' — shrink the SRAM so chunking kicks in, all plans valid."""
+    cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                    acc_buff_vectors=64, out_buff_vectors=64,
+                    uop_buff_entries=32)
+    rng = np.random.default_rng(7)
+    A = rng.integers(-128, 128, (80, 96), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-128, 128, (96, 64), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu()], cfg=cfg)
+    # plan must be multi-chunk
+    plan = plan_chunks(cfg, 5, 6, 4, 16)
+    assert not plan.single_chunk
+    report = verify_program(prog)
+    # loop-count invariant: loops == α·λ·β·row_height regardless of chunking
+    assert report.gemm_loops == 5 * 6 * 4 * 16
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_chunked_equals_unchunked(seed):
+    """Chunking is semantics-preserving: same result with tiny vs big SRAM."""
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-64, 64, (48, 64), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-64, 64, (64, 48), dtype=np.int64).astype(np.int8)
+    small = VTAConfig(inp_buff_vectors=32, wgt_buff_matrices=2,
+                      acc_buff_vectors=32, out_buff_vectors=32,
+                      uop_buff_entries=16)
+    out_small, _ = run_program(compile_matmul(A, B, cfg=small))
+    out_big, _ = run_program(compile_matmul(A, B))
+    np.testing.assert_array_equal(out_small, out_big)
+
+
+def test_bias_is_x_preload():
+    """QKV-bias-style: bias (N,) broadcasts over rows via the ACC preload
+    (C = A·B + X, §2.3)."""
+    rng = np.random.default_rng(11)
+    A = rng.integers(-64, 64, (20, 30), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-64, 64, (30, 20), dtype=np.int64).astype(np.int8)
+    bias = rng.integers(-1000, 1000, (20,), dtype=np.int64).astype(np.int32)
+    out, _ = run_program(compile_matmul(A, B, bias=bias))
+    ref = A.astype(np.int64) @ B.astype(np.int64) + bias[None, :]
+    np.testing.assert_array_equal(out, (ref & 0xFF).astype(np.uint8).view(np.int8))
+
+
+def test_single_row_fc_rule():
+    """Single-row matrices are not height-padded (LP_IN=1) — the rule that
+    reproduces the paper's FC-layer loop counts (§5.1)."""
+    rng = np.random.default_rng(5)
+    A = rng.integers(-64, 64, (1, 120), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-64, 64, (120, 84), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B)
+    report = verify_program(prog)
+    assert report.gemm_loops == 8 * 1 * 6     # λ=8, LP_IN=1, α·β=6
+
+
+def test_tpu_profile_compiles_and_verifies():
+    cfg = vta_tpu()
+    rng = np.random.default_rng(3)
+    A = rng.integers(-16, 16, (130, 200), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-16, 16, (200, 140), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu()], cfg=cfg)
+    verify_program(prog)
+
+
+def test_dependency_tokens_catch_hazard():
+    """Dropping a push flag must trip the simulator's token checker."""
+    rng = np.random.default_rng(1)
+    A = rng.integers(-64, 64, (16, 16), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-64, 64, (16, 16), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B)
+    # find the WGT load that pushes to compute and clear the flag
+    for i in prog.instructions:
+        if isinstance(i, isa.MemInsn) and i.memory_type == isa.MemId.WGT:
+            i.dep.push_next = 0
+    sim = FunctionalSimulator(prog.config, prog.dram_image())
+    with pytest.raises(VTAHazardError):
+        sim.run(prog.instructions)
+
+
+def test_binary_artifacts_roundtrip(tmp_path):
+    """The Fig. 5 binary files are written and re-decodable."""
+    rng = np.random.default_rng(9)
+    A = rng.integers(-64, 64, (16, 32), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-64, 64, (32, 16), dtype=np.int64).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu()])
+    files = prog.write_binaries(tmp_path)
+    assert {p.name for p in files.values()} >= {
+        "input.bin", "weight.bin", "uop.bin", "instructions.bin",
+        "expected_out.bin"}
+    insns = isa.decode_stream(files["insn"].read_bytes())
+    assert isa.encode_stream(insns) == files["insn"].read_bytes()

@@ -1,0 +1,99 @@
+"""Bit-level ISA round-trip tests (paper §2.3, Fig. 3/4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+
+
+def test_insn_width():
+    assert isa.INSN_BYTES == 16    # 128-bit instructions
+    assert isa.UOP_BYTES == 4      # 32-bit UOPs
+    for insn in (isa.GemInsn(), isa.AluInsn(), isa.FinishInsn(),
+                 isa.MemInsn(isa.Opcode.LOAD, isa.MemId.INP, 0, 0, 1, 1, 1)):
+        assert len(insn.encode()) == 16
+
+
+def test_gemm_field_widths_match_fig3():
+    # Fig. 3: 3-bit opcode, 4 dep flags, 13-bit UOP_BGN, 14-bit UOP_END,
+    # 14-bit LP_OUT/LP_IN, 2×11-bit ACC factors, 2×11-bit INP, 2×10-bit WGT.
+    assert isa.GemInsn.W0 == [3, 1, 1, 1, 1, 1, 13, 14, 14, 14]
+    assert isa.GemInsn.W1 == [11, 11, 11, 11, 10, 10]
+    assert isa.Uop.W == [11, 11, 10]
+
+
+@given(uop_bgn=st.integers(0, 2**13 - 1), uop_end=st.integers(0, 2**14 - 1),
+       iter_out=st.integers(0, 2**14 - 1), iter_in=st.integers(0, 2**14 - 1),
+       f=st.tuples(*[st.integers(0, 2**11 - 1)] * 4),
+       w=st.tuples(*[st.integers(0, 2**10 - 1)] * 2),
+       reset=st.integers(0, 1),
+       dep=st.tuples(*[st.integers(0, 1)] * 4))
+@settings(max_examples=200)
+def test_gemm_roundtrip(uop_bgn, uop_end, iter_out, iter_in, f, w, reset, dep):
+    g = isa.GemInsn(reset=reset, uop_bgn=uop_bgn, uop_end=uop_end,
+                    iter_out=iter_out, iter_in=iter_in,
+                    acc_factor_out=f[0], acc_factor_in=f[1],
+                    inp_factor_out=f[2], inp_factor_in=f[3],
+                    wgt_factor_out=w[0], wgt_factor_in=w[1],
+                    dep=isa.DepFlags(*dep))
+    assert isa.GemInsn.decode(g.encode()) == g
+
+
+@given(op=st.sampled_from(list(isa.AluOp)), imm=st.integers(-2**15, 2**15 - 1),
+       use_imm=st.integers(0, 1), uop_bgn=st.integers(0, 2**13 - 1),
+       iters=st.tuples(st.integers(0, 2**14 - 1), st.integers(0, 2**14 - 1)))
+@settings(max_examples=200)
+def test_alu_roundtrip(op, imm, use_imm, uop_bgn, iters):
+    a = isa.AluInsn(alu_opcode=op, imm=imm, use_imm=use_imm, uop_bgn=uop_bgn,
+                    iter_out=iters[0], iter_in=iters[1])
+    assert isa.AluInsn.decode(a.encode()) == a
+
+
+@given(opcode=st.sampled_from([isa.Opcode.LOAD, isa.Opcode.STORE]),
+       mem=st.sampled_from(list(isa.MemId)),
+       sram=st.integers(0, 2**16 - 1), dram=st.integers(0, 2**32 - 1),
+       y=st.integers(0, 2**16 - 1), x=st.integers(0, 2**16 - 1),
+       stride=st.integers(0, 2**16 - 1),
+       pads=st.tuples(*[st.integers(0, 15)] * 4))
+@settings(max_examples=200)
+def test_mem_roundtrip(opcode, mem, sram, dram, y, x, stride, pads):
+    m = isa.MemInsn(opcode, mem, sram, dram, y, x, stride, *pads)
+    assert isa.MemInsn.decode(m.encode()) == m
+
+
+@given(acc=st.integers(0, 2**11 - 1), inp=st.integers(0, 2**11 - 1),
+       wgt=st.integers(0, 2**10 - 1))
+@settings(max_examples=100)
+def test_uop_roundtrip(acc, inp, wgt):
+    u = isa.Uop(acc, inp, wgt)
+    assert isa.Uop.decode(u.encode()) == u
+
+
+def test_stream_roundtrip():
+    insns = [
+        isa.MemInsn(isa.Opcode.LOAD, isa.MemId.UOP, 0, 0x1000, 1, 4, 4),
+        isa.GemInsn(reset=1, uop_bgn=0, uop_end=1),
+        isa.GemInsn(uop_bgn=1, uop_end=2, iter_out=1, iter_in=16),
+        isa.AluInsn(alu_opcode=isa.AluOp.MAX, use_imm=1, imm=0,
+                    iter_out=1, iter_in=16),
+        isa.MemInsn(isa.Opcode.STORE, isa.MemId.OUT, 0, 0x300, 1, 16, 16),
+        isa.FinishInsn(),
+    ]
+    raw = isa.encode_stream(insns)
+    assert len(raw) == 16 * len(insns)
+    decoded = isa.decode_stream(raw)
+    assert isa.encode_stream(decoded) == raw
+    assert [type(i) for i in decoded] == [type(i) for i in insns]
+
+
+def test_loop_count_is_section51_metric():
+    g = isa.GemInsn(uop_bgn=1, uop_end=2, iter_out=1, iter_in=16)
+    assert g.loop_count == 16      # §3.4: one 16×16 matmul = 16 GeMM loops
+
+
+def test_field_overflow_raises():
+    with pytest.raises(ValueError):
+        isa.GemInsn(uop_bgn=2**13).encode()
+    with pytest.raises(ValueError):
+        isa.MemInsn(isa.Opcode.LOAD, isa.MemId.INP, 0, 2**32, 1, 1, 1).encode()

@@ -1,0 +1,169 @@
+"""Pallas kernel correctness sweeps — interpret mode vs the ref.py oracles.
+
+Every kernel is swept over shapes/dtypes and asserted against the pure-jnp
+oracle (per the deliverable (c) contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# vta_gemm
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [(8, 128, 128), (100, 300, 200), (256, 256, 256),
+               (1, 17, 5), (130, 200, 140), (512, 128, 384)]
+
+
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+def test_vta_gemm_shapes(m, k, n):
+    rng = np.random.default_rng(m * 7 + k * 3 + n)
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    out = ops.vta_matmul_pallas(a, b)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.vta_gemm_ref(a, b)))
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("shift", [0, 3, 8])
+@pytest.mark.parametrize("saturate", [False, True])
+def test_vta_gemm_epilogues(relu, shift, saturate):
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.integers(-128, 128, (64, 96)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (96, 80)), jnp.int8)
+    bias = jnp.asarray(rng.integers(-5000, 5000, (80,)), jnp.int32)
+    out = ops.vta_matmul_pallas(a, b, bias, relu=relu, shift=shift,
+                                saturate=saturate)
+    expect = ref.vta_gemm_ref(a, b, bias, relu=relu, shift=shift,
+                              saturate=saturate)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.int8, jnp.int32])
+def test_vta_gemm_out_dtypes(out_dtype):
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(-128, 128, (32, 64)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (64, 32)), jnp.int8)
+    out = ops.vta_matmul_pallas(a, b, out_dtype=out_dtype)
+    assert out.dtype == out_dtype
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.vta_gemm_ref(a, b, out_dtype=out_dtype)))
+
+
+@given(m=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_vta_gemm_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    out = ops.vta_matmul_pallas(a, b, relu=True, shift=2)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.vta_gemm_ref(a, b, relu=True, shift=2)))
+
+
+def test_vta_gemm_matches_core_simulator():
+    """Cross-validation: the Pallas kernel (truncating mode) must agree with
+    the paper-faithful core/ functional simulator on the same matrices."""
+    from repro.core.gemm_compiler import compile_matmul
+    from repro.core.simulator import run_program
+    rng = np.random.default_rng(17)
+    A = rng.integers(-128, 128, (48, 80), dtype=np.int64).astype(np.int8)
+    B = rng.integers(-128, 128, (80, 32), dtype=np.int64).astype(np.int8)
+    sim_out, _ = run_program(compile_matmul(A, B))
+    kern_out = ops.vta_matmul_pallas(jnp.asarray(A), jnp.asarray(B),
+                                     saturate=False)
+    np.testing.assert_array_equal(sim_out, np.asarray(kern_out))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (b, h, hkv, sq, skv, d)
+    (1, 4, 4, 64, 64, 32),      # MHA
+    (2, 4, 2, 64, 64, 32),      # GQA 2:1
+    (1, 8, 1, 32, 32, 16),      # MQA (gemma3 kv=1)
+    (1, 2, 2, 48, 96, 32),      # cross-shaped (prefill continuation)
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d", ATTN_CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_shapes(b, h, hkv, sq, skv, d, causal):
+    rng = np.random.default_rng(b + h + sq)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    off = skv - sq if causal and skv > sq else 0
+    out = ops.attention_pallas(q, k, v, causal=causal, q_offset=off,
+                               block_q=32, block_k=32)
+    expect = ref.attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), dtype)
+    out = ops.attention_pallas(q, k, v, block_q=16, block_k=16)
+    expect = ref.attention_ref(q, k, v)
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_attention_sliding_window():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    out = ops.attention_pallas(q, k, v, causal=True, window=16,
+                               block_q=16, block_k=16)
+    expect = ref.attention_ref(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_attention_q_offset_decode_chunk():
+    """Chunked prefill: q block starting at position 32 of a 64-long KV."""
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    out = ops.attention_pallas(q, k, v, causal=True, q_offset=32,
+                               block_q=16, block_k=16)
+    expect = ref.attention_ref(q, k, v, causal=True, q_offset=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(sq=st.sampled_from([16, 32, 48]), skv=st.sampled_from([16, 32, 64]),
+       h=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_attention_property(sq, skv, h, g, seed):
+    if h % g:
+        g = 1
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, h, sq, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, h // g, skv, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, h // g, skv, 16)), jnp.float32)
+    off = max(0, skv - sq)
+    out = ops.attention_pallas(q, k, v, causal=True, q_offset=off,
+                               block_q=16, block_k=16)
+    expect = ref.attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)

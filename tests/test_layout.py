@@ -1,0 +1,79 @@
+"""Data-definition tests (paper §3.2): padding / splitting / binarisation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (binarize_blocks, debinarize_blocks,
+                               matrix_padding, matrix_splitting,
+                               matrix_to_binary, matrix_unsplit,
+                               remove_padding, should_pad_height)
+
+
+def test_paper_3x3_example():
+    """§3.2 worked example: a 3×3 matrix, block_size=2 → 4×4 padded →
+    four 2×2 blocks (A0..A3) ordered by row."""
+    m = np.arange(9, dtype=np.int8).reshape(3, 3)
+    padded = matrix_padding(m, 2)
+    assert padded.shape == (4, 4)
+    np.testing.assert_array_equal(padded[:3, :3], m)
+    assert padded[3].sum() == 0 and padded[:, 3].sum() == 0
+    split = matrix_splitting(padded, 2)
+    assert (split.block_rows, split.block_cols) == (2, 2)
+    np.testing.assert_array_equal(split.block(0, 0), m[:2, :2])
+    # binarisation order: left→right, top→bottom
+    raw = binarize_blocks(split, np.int8)
+    assert raw[:4] == bytes([0, 1, 3, 4])   # A0 row-major
+
+
+def test_wgt_blocks_transposed_order_unchanged():
+    m = np.arange(16, dtype=np.int8).reshape(4, 4)
+    split = matrix_splitting(m, 2)
+    raw = binarize_blocks(split, np.int8, transpose=True)
+    # first block transposed: [[0,1],[4,5]]ᵀ = [[0,4],[1,5]]
+    assert raw[:4] == bytes([0, 4, 1, 5])
+    rt = debinarize_blocks(raw, np.int8, 2, 2, 2, 2, transpose=True)
+    np.testing.assert_array_equal(matrix_unsplit(rt), m)
+
+
+@given(h=st.integers(1, 70), w=st.integers(1, 70), bs=st.sampled_from([2, 8, 16]))
+@settings(max_examples=100)
+def test_pad_split_binarise_roundtrip(h, w, bs):
+    rng = np.random.default_rng(h * 1000 + w * 10 + bs)
+    m = rng.integers(-128, 128, (h, w), dtype=np.int64).astype(np.int8)
+    raw, split = matrix_to_binary(m, bs, np.int8)
+    # widths always padded to block multiples; heights per the §3.2 rule
+    assert split.padded_shape[1] % bs == 0
+    if h > 1:
+        assert split.padded_shape[0] % bs == 0
+    else:
+        assert split.row_height == 1
+    rt = debinarize_blocks(raw, np.int8, split.block_rows, split.block_cols,
+                           split.row_height, bs)
+    recovered = remove_padding(matrix_unsplit(rt), (h, w))
+    np.testing.assert_array_equal(recovered, m)
+
+
+@given(h=st.integers(1, 40), w=st.integers(1, 40))
+@settings(max_examples=50)
+def test_padding_preserves_values_and_zero_fills(h, w):
+    rng = np.random.default_rng(h * 100 + w)
+    m = rng.integers(-128, 128, (h, w), dtype=np.int64).astype(np.int8)
+    p = matrix_padding(m, 16, pad_height=True)
+    np.testing.assert_array_equal(p[:h, :w], m)
+    assert p[h:].sum() == 0 and p[:, w:].sum() == 0
+    assert p.shape[0] % 16 == 0 and p.shape[1] % 16 == 0
+
+
+def test_height_padding_rule():
+    """The '(generally)' rule of §3.2 that reproduces the paper's §5.1 loop
+    counts: multi-row matrices are height-padded, single-row are not."""
+    assert should_pad_height(np.zeros((784, 25), dtype=np.int8))
+    assert not should_pad_height(np.zeros((1, 400), dtype=np.int8))
+
+
+def test_int32_acc_binarisation():
+    m = np.array([[2**30, -2**30]], dtype=np.int32)
+    raw, split = matrix_to_binary(m, 2, np.int32, pad_height=False)
+    rt = debinarize_blocks(raw, np.int32, split.block_rows, split.block_cols,
+                           split.row_height, 2)
+    np.testing.assert_array_equal(matrix_unsplit(rt)[:1, :2], m)

@@ -1,0 +1,98 @@
+"""LeNet-5 end-to-end reproduction tests (paper §4.3 / §5).
+
+These are the paper's headline claims, asserted verbatim:
+
+* layer-1 lowering shapes (§4.3);
+* 2942 GeMM loops total (§5.1) with the per-layer breakdown;
+* 2972 TensorGemm cycles and the 47552-cycle SIMD-CPU comparison (§5.2);
+* bit-accurate execution of the full 5-layer chain on the functional
+  simulator, including the host-side reshaping of Fig. 12.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cycle_model import FPGA_CLOCK_HZ, analyze_programs
+from repro.core.network_compiler import compile_network
+from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                reference_forward_float,
+                                reference_forward_int8, synthetic_digit)
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    weights = lenet5_random_weights(seed=0)
+    net = compile_network(lenet5_specs(weights), synthetic_digit(0))
+    return weights, net
+
+
+def test_layer1_lowering_shapes(lenet):
+    _, net = lenet
+    l1 = net.layers[0]
+    assert l1.input_matrix.shape == (784, 25)       # §4.3 verbatim
+    a_split_rows = 784 // 16                        # α = 49
+    assert a_split_rows == 49
+    assert l1.weight_matrix.shape == (25, 6)        # λ·bs=32 → λ=2 after pad
+    assert l1.keep_rows is not None and len(l1.keep_rows) == 196
+    assert (l1.out_h, l1.out_w) == (14, 14)         # (1,6,14,14)
+
+
+def test_gemm_loops_2942(lenet):
+    """§5.1: 'the execution requires 2942 GeMM loops'."""
+    _, net = lenet
+    assert net.gemm_loops_per_layer() == [1568, 1120, 200, 48, 6]
+    assert net.gemm_loops() == 2942
+
+
+def test_cycle_model_matches_paper(lenet):
+    """§5.2: 2972 TensorGemm cycles; 47552 SIMD-CPU cycles; ≈10 GHz CPU."""
+    _, net = lenet
+    cr = net.cycle_report()
+    assert cr.gemm_insns == 5                   # one GeMM per layer
+    assert cr.tensor_gemm_cycles == 2972
+    assert cr.simd_cpu_cycles(16) == 47552
+    assert 9e9 < cr.equivalent_cpu_clock_hz() < 11e9
+    # our leaner ALU schedule: total below the paper's 6358 (EXPERIMENTS.md)
+    assert cr.total_compute_cycles <= 6358
+    assert cr.execution_time_s(FPGA_CLOCK_HZ) < 9.9e-6
+
+
+def test_chained_execution_bit_accurate(lenet):
+    """Fig. 12 chain on the functional simulator == integer reference."""
+    weights, net = lenet
+    out, reports = net.verify()
+    shifts = [l.requant_shift for l in net.layers]
+    logits, _ = reference_forward_int8(weights, synthetic_digit(0), shifts)
+    np.testing.assert_array_equal(out, logits)
+    # 5 VTA executions, each terminated by FINISH
+    assert len(reports) == 5
+    assert sum(r.gemm_loops for r in reports) == 2942
+
+
+def test_classification_agrees_with_float_reference(lenet):
+    """The paper validates against a (PyTorch) float model; ours is JAX."""
+    weights, net = lenet
+    out, _ = net.run_functional()
+    fl = reference_forward_float(weights, synthetic_digit(0))
+    assert int(np.argmax(out)) == int(np.argmax(fl))
+
+
+def test_multiple_images_bit_accurate():
+    """Robustness: different inputs and weight seeds stay bit-accurate."""
+    for seed in (1, 2):
+        weights = lenet5_random_weights(seed=seed)
+        img = synthetic_digit(seed + 10)
+        net = compile_network(lenet5_specs(weights), img)
+        out, _ = net.verify()
+        shifts = [l.requant_shift for l in net.layers]
+        logits, _ = reference_forward_int8(weights, img, shifts)
+        np.testing.assert_array_equal(out, logits)
+        assert net.gemm_loops() == 2942   # loop count is input-independent
+
+
+def test_dram_traffic_reported(lenet):
+    """§5.1: the functional simulator reports DRAM exchange volume."""
+    _, net = lenet
+    _, reports = net.run_functional()
+    assert all(r.dram_bytes_read > 0 for r in reports)
+    assert all(r.dram_bytes_written > 0 for r in reports)

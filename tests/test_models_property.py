@@ -1,0 +1,184 @@
+"""Property tests on the model substrates (hypothesis where shapes allow).
+
+Key invariants:
+* chunked attention == exact attention oracle for any chunking;
+* chunked WKV (rwkv6) == naive sequential recurrence;
+* chunked mamba scan == naive sequential recurrence;
+* MoE: no-drop capacity ⇒ output invariant to batch grouping; capacity
+  respected under drops; aux losses sane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import attention_ref
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import chunked_attention
+from repro.models.mamba import mamba_apply, mamba_defs, mamba_init_state
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.params import init_params
+from repro.models.rwkv6 import chunked_wkv
+
+
+# ---------------------------------------------------------------------------
+# chunked attention
+# ---------------------------------------------------------------------------
+
+@given(sq=st.sampled_from([16, 32, 64]), qc=st.sampled_from([4, 8, 16, 64]),
+       kc=st.sampled_from([4, 8, 32]), h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_matches_oracle(sq, qc, kc, h, g, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, h, sq, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, h // g, sq, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, h // g, sq, 16)), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_chunked_attention_window(window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=8, kv_chunk=8)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_causal_skip_matches_masked():
+    """§Perf optimization: skipping fully-masked kv chunks is exact."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    base = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                             causal_skip=False)
+    skip = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                             causal_skip=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(skip),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked WKV vs sequential recurrence
+# ---------------------------------------------------------------------------
+
+def _wkv_sequential(r, k, v, w, u):
+    b, h, s, n = r.shape
+    S = np.zeros((b, h, n, n), np.float64)
+    out = np.zeros((b, h, s, n), np.float64)
+    r, k, v, w = (np.asarray(t, np.float64) for t in (r, k, v, w))
+    u = np.asarray(u, np.float64)
+    for t in range(s):
+        kv = np.einsum("bhn,bhm->bhnm", k[:, :, t], v[:, :, t])
+        out[:, :, t] = np.einsum(
+            "bhn,bhnm->bhm", r[:, :, t], S + u[None, :, :, None] * kv)
+        S = S * w[:, :, t, :, None] + kv
+    return out, S
+
+
+@given(s=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_chunked_wkv_matches_sequential(s, chunk, seed):
+    rng = np.random.default_rng(seed)
+    b, h, n = 1, 2, 8
+    r = rng.normal(size=(b, h, s, n)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, n)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, n)).astype(np.float32)
+    w = np.exp(-np.exp(rng.normal(size=(b, h, s, n)))).astype(np.float32)
+    u = rng.normal(size=(h, n)).astype(np.float32) * 0.5
+    out, state = chunked_wkv(jnp.asarray(r), jnp.asarray(k), jnp.asarray(v),
+                             jnp.asarray(w), jnp.asarray(u), chunk=chunk)
+    ref_out, ref_state = _wkv_sequential(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), ref_out, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), ref_state,
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Mamba chunked scan vs sequential
+# ---------------------------------------------------------------------------
+
+def test_mamba_chunked_matches_two_halves():
+    cfg = ModelConfig("m", 1, 32, 4, 4, 64, 97, ssm_kind="mamba",
+                      mamba_d_state=4)
+    p = init_params(mamba_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.float32)
+    full = mamba_apply(p, cfg, x)
+    st0 = mamba_init_state(cfg, 2, jnp.float32)
+    a, st1 = mamba_apply(p, cfg, x[:, :8], state=st0, return_state=True)
+    b, _ = mamba_apply(p, cfg, x[:, 8:], state=st1, return_state=True)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([a, b], 1)),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(cf=8.0):
+    return ModelConfig("x", 1, 32, 4, 4, 64, 97,
+                       moe=MoEConfig(4, 2, 64, capacity_factor=cf))
+
+
+def test_moe_no_drop_is_grouping_invariant():
+    cfg = _moe_cfg(cf=8.0)       # capacity ≥ worst case → no drops
+    p = init_params(moe_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 32)), jnp.float32)
+    full, _ = moe_apply(p, cfg, x)
+    a, _ = moe_apply(p, cfg, x[:1])
+    b, _ = moe_apply(p, cfg, x[1:])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([a, b], 0)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg(cf=0.25)      # tiny capacity → most tokens dropped
+    p = init_params(moe_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.float32)
+    out, aux = moe_apply(p, cfg, x)
+    # dropped tokens contribute exactly zero
+    norms = np.linalg.norm(np.asarray(out).reshape(-1, 32), axis=-1)
+    assert (norms == 0).sum() > 0
+    assert np.isfinite(float(aux["load_balance"]))
+
+
+def test_moe_gates_normalised_and_aux_bounded():
+    cfg = _moe_cfg()
+    p = init_params(moe_defs(cfg), jax.random.PRNGKey(2), jnp.float32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 32, 32)), jnp.float32)
+    _, aux = moe_apply(p, cfg, x)
+    # load balance ≥ 1 (perfectly balanced == 1), z-loss ≥ 0
+    assert float(aux["load_balance"]) >= 0.99
+    assert float(aux["router_z"]) >= 0.0
+
+
+def test_moe_grad_flows_through_router():
+    cfg = _moe_cfg()
+    p = init_params(moe_defs(cfg), jax.random.PRNGKey(3), jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 8, 32)), jnp.float32)
+
+    def loss(p):
+        out, _ = moe_apply(p, cfg, x)
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0   # gate weights carry grad

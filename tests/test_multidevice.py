@@ -1,0 +1,158 @@
+"""Multi-device GSPMD correctness, in subprocesses with 8 fake devices
+(this file's tests spawn `python -c` with XLA_FLAGS so the main test
+process keeps its single device).
+
+* sharded (2×4 data×model) training == single-device training, bit-close;
+* int8-compressed pod gradient all-reduce ≈ exact pod mean;
+* dense sequence-sharded KV decode == replicated decode.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SNIPPET_HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+sys_out = {}
+"""
+
+
+def _run(snippet: str) -> dict:
+    code = _SNIPPET_HEADER + textwrap.dedent(snippet) + \
+        "\nprint('RESULT:' + json.dumps(sys_out))\n"
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600, cwd=".")
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise AssertionError(f"no RESULT in stdout:\n{proc.stdout[-2000:]}")
+
+
+def test_sharded_training_matches_single_device():
+    out = _run("""
+    from repro.configs import get_smoke
+    from repro.launch.specs import param_pack, tree_named
+    from repro.models.params import init_params
+    from repro.optim import adamw
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    cfg = get_smoke("qwen2.5-3b")
+    tc = TrainConfig(opt=adamw.AdamWConfig(lr=1e-3, warmup_steps=1,
+                                           total_steps=10))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32),
+    }
+
+    losses = {}
+    for name, mesh in [
+        ("single", jax.make_mesh((1, 1), ("data", "model"))),
+        ("sharded", jax.make_mesh((2, 4), ("data", "model"))),
+    ]:
+        with jax.set_mesh(mesh):
+            defs, _, specs = param_pack(cfg, mesh, jnp.float32)
+            shard = tree_named(mesh, specs)
+            params = jax.device_put(
+                init_params(defs, jax.random.PRNGKey(0), jnp.float32), shard)
+            opt = adamw.init(tc.opt, params)
+            step = jax.jit(make_train_step(cfg, tc),
+                           in_shardings=(shard, None, None),
+                           out_shardings=(shard, None, None))
+            ls = []
+            for _ in range(3):
+                params, opt, m = step(params, opt, batch)
+                ls.append(float(m["loss"]))
+            losses[name] = ls
+    sys_out["single"] = losses["single"]
+    sys_out["sharded"] = losses["sharded"]
+    """)
+    import numpy as np
+    np.testing.assert_allclose(out["single"], out["sharded"],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_seq_sharded_decode_matches_replicated():
+    out = _run("""
+    from repro.configs import get_smoke
+    from repro.launch.specs import cache_pack, param_pack, tree_named
+    from repro.models.params import init_params
+    from repro.serving.cache import init_cache
+    from repro.serving.engine import decode_step, prefill
+
+    cfg = get_smoke("qwen2.5-3b")
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+
+    logits = {}
+    for name, mesh in [
+        ("single", jax.make_mesh((1, 1), ("data", "model"))),
+        ("sharded", jax.make_mesh((2, 4), ("data", "model"))),
+    ]:
+        with jax.set_mesh(mesh):
+            defs, _, specs = param_pack(cfg, mesh, jnp.float32)
+            shard = tree_named(mesh, specs)
+            params = jax.device_put(
+                init_params(defs, jax.random.PRNGKey(0), jnp.float32), shard)
+            _, c_specs = cache_pack(cfg, mesh, 2, 32, jnp.float32)
+            cache = jax.device_put(init_cache(cfg, 2, 32, jnp.float32),
+                                   tree_named(mesh, c_specs))
+            lg, cache = prefill(params, cfg, toks[:, :8], cache)
+            for t in range(8, 10):
+                lg, cache = decode_step(params, cfg, cache, toks[:, t],
+                                        jnp.int32(t))
+            logits[name] = np.asarray(lg[:, :cfg.vocab]).tolist()
+    sys_out.update(logits)
+    """)
+    import numpy as np
+    np.testing.assert_allclose(out["single"], out["sharded"],
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_compressed_pod_allreduce_close_to_mean():
+    out = _run("""
+    from jax.sharding import PartitionSpec as P
+    from repro.train.distributed import compressed_pod_allreduce
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rng = np.random.default_rng(0)
+    g_global = rng.normal(size=(2, 64)).astype(np.float32)  # per-pod rows
+
+    with jax.set_mesh(mesh):
+        @jax.jit
+        def run(g):
+            return compressed_pod_allreduce(g)
+        g_dev = jax.device_put(
+            jnp.asarray(g_global),
+            jax.NamedSharding(mesh, P("pod", None)))
+        out_arr = run(g_dev)
+    mean = g_global.mean(axis=0)
+    got = np.asarray(out_arr)
+    sys_out["max_err"] = float(np.abs(got - mean[None]).max())
+    sys_out["scale"] = float(np.abs(mean).max())
+    """)
+    # int8 quantisation error bound: ~scale/63
+    assert out["max_err"] <= out["scale"] / 63 * 2.5 + 1e-6
+
+
+def test_dryrun_entrypoint_single_cell():
+    """The assignment's entry point runs standalone (small arch to keep
+    the subprocess quick)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2.5-3b",
+         "--shape", "decode_32k", "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, env=env, timeout=900, cwd=".")
+    assert "OK  qwen2.5-3b_decode_32k_16x16" in proc.stdout, \
+        proc.stdout[-2000:] + proc.stderr[-2000:]

@@ -1,0 +1,97 @@
+"""Optimizer tests: AdamW semantics, 8-bit Adam fidelity, LR schedule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+
+
+def _quadratic_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(16, 300)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+
+
+def _run(cfg, steps=150, seed=0):
+    params = _quadratic_params(seed)
+    target = jax.tree.map(lambda p: p * 0 + 1.0, params)
+    state = adamw.init(cfg, params)
+
+    def loss(p):
+        return sum(jnp.mean((a - t) ** 2)
+                   for a, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(loss)(params)
+        return adamw.apply_updates(cfg, params, g, state)
+
+    for _ in range(steps):
+        params, state, metrics = step(params, state)
+    return float(loss(params)), params, metrics
+
+
+def test_adamw_converges():
+    final, _, metrics = _run(adamw.AdamWConfig(
+        lr=5e-2, weight_decay=0.0, warmup_steps=1, total_steps=200))
+    assert final < 0.05
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_eightbit_tracks_f32():
+    cfg32 = adamw.AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1,
+                              total_steps=200)
+    cfg8 = adamw.AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1,
+                             total_steps=200, eightbit=True)
+    f32, p32, _ = _run(cfg32)
+    f8, p8, _ = _run(cfg8)
+    assert f8 < 0.1                     # still converges
+    # trajectories stay close (quantisation noise is bounded)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p8)):
+        assert float(jnp.abs(a - b).mean()) < 0.05
+
+
+def test_eightbit_moment_is_param_shaped():
+    """int8 moments keep the parameter shape (sharding inheritance —
+    EXPERIMENTS.md §Perf iteration 'm8layout')."""
+    cfg = adamw.AdamWConfig(eightbit=True)
+    params = {"w": jnp.zeros((8, 300), jnp.float32)}
+    st = adamw.init(cfg, params)
+    assert st.mu["w"].q.shape == (8, 300)
+    assert st.mu["w"].scale.shape == (8, 2)    # ceil(300/256) = 2 blocks
+
+
+def test_q8_roundtrip_bounded_error():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 700)) * 10, jnp.float32)
+    q, s = adamw._q8(x, 2)
+    back = adamw._dq8(q, s, 2)
+    err = np.abs(np.asarray(back - x))
+    # power-2 code: relative error ~2/127 of magnitude + floor scale/127²
+    rel = err / np.maximum(np.abs(np.asarray(x)), 1e-6)
+    big = np.abs(np.asarray(x)) > np.abs(np.asarray(x)).max() / 50
+    assert rel[big].max() < 0.05
+
+
+def test_grad_clip():
+    cfg = adamw.AdamWConfig(lr=1e-3, grad_clip=1e-3, warmup_steps=1)
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw.init(cfg, params)
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    new_params, _, m = adamw.apply_updates(cfg, params, huge, state)
+    assert float(m["grad_norm"]) > 1e5
+    # step is bounded by lr regardless of gradient magnitude
+    assert float(jnp.abs(new_params["w"] - params["w"]).max()) < 2 * cfg.lr
+
+
+def test_lr_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.lr_at(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6            # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-3)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))  # decay
