@@ -20,8 +20,10 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, repeats=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # Warm up (trigger compilation); block_until_ready traverses pytrees,
+    # so it blocks on tuple returns and bare arrays alike.
+    warmup = fn(*args)
+    jax.block_until_ready(warmup)
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -56,5 +58,44 @@ def attention_bench() -> List[Dict]:
              "value": round(dt * 1e6, 1), "derived": ""}]
 
 
+def simulator_bench(repeats: int = 3) -> List[Dict]:
+    """Functional-simulator throughput, oracle vs the vectorised fast path.
+
+    Reported per backend: end-to-end LeNet-5 simulation wall time,
+    instructions/s and GeMM-loops/s — the perf-trajectory rows for the
+    fast-path speedup (target ≥10×).
+    """
+    from repro.core.network_compiler import compile_network
+    from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                    synthetic_digit)
+
+    net = compile_network(lenet5_specs(lenet5_random_weights(0)),
+                          synthetic_digit(0))
+    n_insn = sum(len(l.program.instructions) for l in net.layers)
+    loops = net.gemm_loops()
+    rows: List[Dict] = []
+    wall: Dict[str, float] = {}
+    for backend in ("oracle", "fast"):
+        # Warm up: compiles + caches the instruction plans on the fast path.
+        net.run_functional(check_chaining=False, backend=backend)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            net.run_functional(check_chaining=False, backend=backend)
+            times.append(time.perf_counter() - t0)
+        dt = float(np.median(times))
+        wall[backend] = dt
+        rows.append({"name": f"sim/{backend}/lenet5_wall_ms",
+                     "value": round(dt * 1e3, 2), "derived": ""})
+        rows.append({"name": f"sim/{backend}/insn_per_s",
+                     "value": int(n_insn / dt), "derived": ""})
+        rows.append({"name": f"sim/{backend}/gemm_loops_per_s",
+                     "value": int(loops / dt), "derived": ""})
+    rows.append({"name": "sim/fast_speedup_x",
+                 "value": round(wall["oracle"] / wall["fast"], 1),
+                 "derived": "target >=10x"})
+    return rows
+
+
 def all_tables() -> List[Dict]:
-    return gemm_bench() + attention_bench()
+    return gemm_bench() + attention_bench() + simulator_bench()

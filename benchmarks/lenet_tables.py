@@ -93,16 +93,25 @@ def compile_time_table(repeats: int = 3) -> List[Dict]:
 
 
 def simulator_throughput_table() -> List[Dict]:
-    """Functional-simulator speed (the paper: 'almost instantaneously')."""
+    """Functional-simulator speed (the paper: 'almost instantaneously'),
+    for both backends: the oracle interpreter and the vectorised fast path."""
     net = _network()
-    t0 = time.perf_counter()
-    net.run_functional(check_chaining=False)
-    dt = time.perf_counter() - t0
-    return [
-        {"name": "funcsim/wall_s", "value": round(dt, 3), "paper": None},
-        {"name": "funcsim/gemm_loops_per_s",
-         "value": int(net.gemm_loops() / dt), "paper": None},
-    ]
+    rows: List[Dict] = []
+    wall = {}
+    for backend in ("oracle", "fast"):
+        net.run_functional(check_chaining=False, backend=backend)  # warm up
+        t0 = time.perf_counter()
+        net.run_functional(check_chaining=False, backend=backend)
+        dt = time.perf_counter() - t0
+        wall[backend] = dt
+        rows.append({"name": f"funcsim/{backend}/wall_s",
+                     "value": round(dt, 4), "paper": None})
+        rows.append({"name": f"funcsim/{backend}/gemm_loops_per_s",
+                     "value": int(net.gemm_loops() / dt), "paper": None})
+    rows.append({"name": "funcsim/fast_speedup_x",
+                 "value": round(wall["oracle"] / wall["fast"], 1),
+                 "paper": None})
+    return rows
 
 
 def all_tables() -> List[Dict]:

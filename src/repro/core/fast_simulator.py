@@ -1,0 +1,515 @@
+"""Vectorized fast-path VTA simulator — compiled instruction plans.
+
+The oracle interpreter (:mod:`repro.core.simulator`) executes LOAD/STORE,
+GEMM and ALU element-by-element in Python loops: every GeMM loop of
+Algorithm 1 is one Python iteration, every DRAM struct move one
+``_struct_from_dram`` call.  This module replaces that inner-loop work with
+batched numpy operations while staying bit-exact, in two stages:
+
+1. **Plan compilation** (:func:`compile_plan`) — the instruction stream is
+   decoded *once* into an :class:`InstructionPlan`: the ``iter_out ×
+   iter_in × uop`` loop lattice of each GEMM/ALU instruction becomes
+   precomputed index-offset arrays, and each LOAD/STORE becomes a strided
+   byte-gather/scatter geometry.  Plans depend only on instruction fields
+   (never on data), so they are cached per program (:func:`plan_for`) and
+   amortised across repeated executions — the batch-serving case.
+
+2. **Vectorized execution** (:class:`FastSimulator`) — LOAD/STORE run as
+   strided slice copies, GEMM as one ``einsum`` over the uop batch per
+   instruction with a merge-by-destination scatter-add, ALU as vectorized
+   min/max/add/shift over the whole index lattice.
+
+Bit-exactness is preserved against the oracle, including:
+
+* int32 wrap-around — additions are merged in int64 and truncated once;
+  this equals the oracle's per-step wrap because addition is associative
+  modulo 2**32;
+* the truncating ACC→OUT commit before every STORE;
+* SHR masking (``y & 31``) and repeated-destination shift accumulation;
+* the §5.1 observability counters (loop counts, DRAM traffic, trace) and
+  the §2.3 dependency-token hazard checking, shared with the oracle via
+  :class:`~repro.core.simulator.TokenQueues`.
+
+ALU instructions whose lattice has read-after-write dependencies that no
+order-independent merge can express (e.g. a vector-pair op whose source
+vectors are also destinations) fall back to a per-lattice-point loop with
+the oracle's exact semantics — correctness never depends on the compiler
+emitting "nice" programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from . import isa
+from .hwconfig import VTAConfig
+from .simulator import SimReport, TokenQueues, VTAHazardError  # noqa: F401
+
+# Bound the per-chunk gather footprint of the GEMM einsum (the WGT gather
+# materialises block_size² int64 per lattice point).
+_GEMM_CHUNK_BYTES = 64 << 20
+
+
+# ---------------------------------------------------------------------------
+# Plan steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _LoadStep:
+    kind: str                   # uop | inp | wgt | acc | out
+    mem: isa.MemId
+    nbytes: int                 # bytes per structure
+    zero_base: int              # SRAM span to clear (padding), len 0 = none
+    zero_len: int
+    sram_idx: np.ndarray        # (n,) destination structure indices
+    byte_idx: np.ndarray        # (n, nbytes) DRAM byte gather lattice
+    end_byte: int               # max byte index + 1, for the bounds check
+
+
+@dataclasses.dataclass
+class _StoreStep:
+    kind: str
+    nbytes: int
+    n: int                      # structures moved (sram_base..sram_base+n)
+    sram_base: int
+    byte_idx: Optional[np.ndarray]   # (n, nbytes) scatter, None -> row loop
+    row_dram_starts: np.ndarray      # (y_size,) byte offsets (row-loop path)
+    row_bytes: int
+    end_byte: int
+
+
+@dataclasses.dataclass
+class _GemmStep:
+    reset: bool
+    u_idx: np.ndarray           # (nu,) uop buffer indices
+    off_acc: np.ndarray         # (P,) iter_out×iter_in lattice offsets
+    off_inp: np.ndarray
+    off_wgt: np.ndarray
+    loop_count: int
+
+
+@dataclasses.dataclass
+class _AluStep:
+    op: isa.AluOp
+    use_imm: bool
+    imm: int
+    u_idx: np.ndarray
+    off_dst: np.ndarray         # (P,)
+    off_src: np.ndarray
+    loop_count: int
+
+
+@dataclasses.dataclass
+class _FinishStep:
+    pass
+
+
+@dataclasses.dataclass
+class InstructionPlan:
+    """A compiled instruction stream: one executable step per instruction.
+
+    Dependency flags are read live from the instruction objects at
+    execution time, so token-hazard behaviour tracks ``dep`` mutations;
+    the precomputed index lattices assume the *geometry* fields are
+    frozen after compilation.
+    """
+
+    steps: List[Tuple[object, object]]   # (insn, step payload)
+
+    @property
+    def n_insns(self) -> int:
+        return len(self.steps)
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation
+# ---------------------------------------------------------------------------
+
+_MEM_KIND = {
+    isa.MemId.UOP: "uop", isa.MemId.INP: "inp", isa.MemId.WGT: "wgt",
+    isa.MemId.ACC: "acc", isa.MemId.OUT: "out",
+}
+
+
+def _outer_offsets(iter_out: int, iter_in: int, f_out: int, f_in: int
+                   ) -> np.ndarray:
+    """Ravelled ``i_out*f_out + i_in*f_in`` lattice, loop order (out, in)."""
+    io = np.arange(iter_out, dtype=np.int64) * f_out
+    ii = np.arange(iter_in, dtype=np.int64) * f_in
+    return (io[:, None] + ii[None, :]).reshape(-1)
+
+
+def _compile_load(cfg: VTAConfig, m: isa.MemInsn) -> _LoadStep:
+    kind = _MEM_KIND[m.memory_type]
+    nbytes = cfg.elem_bytes(kind)
+    row_w = m.x_pad_0 + m.x_size + m.x_pad_1
+    total_rows = m.y_pad_0 + m.y_size + m.y_pad_1
+    has_pad = (m.y_pad_0 or m.y_pad_1 or m.x_pad_0 or m.x_pad_1)
+    zero_len = total_rows * row_w if has_pad else 0
+
+    y = np.arange(m.y_size, dtype=np.int64)
+    x = np.arange(m.x_size, dtype=np.int64)
+    sram_idx = (m.sram_base + (m.y_pad_0 + y)[:, None] * row_w
+                + m.x_pad_0 + x[None, :]).reshape(-1)
+    log_addr = (m.dram_base + y[:, None] * m.x_stride + x[None, :]).reshape(-1)
+    byte_idx = (log_addr[:, None] * nbytes
+                + np.arange(nbytes, dtype=np.int64)[None, :])
+    end_byte = int(byte_idx.max(initial=-1)) + 1
+    return _LoadStep(kind=kind, mem=m.memory_type, nbytes=nbytes,
+                     zero_base=m.sram_base, zero_len=zero_len,
+                     sram_idx=sram_idx, byte_idx=byte_idx, end_byte=end_byte)
+
+
+def _compile_store(cfg: VTAConfig, m: isa.MemInsn) -> _StoreStep:
+    kind = _MEM_KIND[m.memory_type]
+    if kind == "uop":
+        raise ValueError("STORE UOP is not a valid VTA instruction")
+    nbytes = cfg.elem_bytes(kind)
+    n = m.y_size * m.x_size
+    row_bytes = m.x_size * nbytes
+    y = np.arange(m.y_size, dtype=np.int64)
+    row_dram_starts = (m.dram_base + y * m.x_stride) * nbytes
+    end_byte = int((row_dram_starts.max(initial=-nbytes) + row_bytes))
+    # Overlapping rows (stride < x_size) must be written in order; the
+    # single-scatter path requires disjoint rows.
+    overlap = m.y_size > 1 and m.x_stride < m.x_size
+    byte_idx = None
+    if not overlap:
+        if n:
+            byte_idx = (row_dram_starts[:, None]
+                        + np.arange(row_bytes, dtype=np.int64)[None, :]
+                        ).reshape(n, nbytes)
+        else:
+            byte_idx = np.zeros((0, nbytes), dtype=np.int64)
+    return _StoreStep(kind=kind, nbytes=nbytes, n=n, sram_base=m.sram_base,
+                      byte_idx=byte_idx, row_dram_starts=row_dram_starts,
+                      row_bytes=row_bytes, end_byte=end_byte)
+
+
+def _compile_gemm(g: isa.GemInsn) -> _GemmStep:
+    n_uop = max(0, g.uop_end - g.uop_bgn)
+    u_idx = np.arange(g.uop_bgn, g.uop_bgn + n_uop, dtype=np.int64)
+    return _GemmStep(
+        reset=bool(g.reset), u_idx=u_idx,
+        off_acc=_outer_offsets(g.iter_out, g.iter_in,
+                               g.acc_factor_out, g.acc_factor_in),
+        off_inp=_outer_offsets(g.iter_out, g.iter_in,
+                               g.inp_factor_out, g.inp_factor_in),
+        off_wgt=_outer_offsets(g.iter_out, g.iter_in,
+                               g.wgt_factor_out, g.wgt_factor_in),
+        loop_count=g.iter_out * g.iter_in * n_uop)
+
+
+def _compile_alu(a: isa.AluInsn) -> _AluStep:
+    n_uop = max(0, a.uop_end - a.uop_bgn)
+    u_idx = np.arange(a.uop_bgn, a.uop_bgn + n_uop, dtype=np.int64)
+    return _AluStep(
+        op=a.alu_opcode, use_imm=bool(a.use_imm), imm=a.imm, u_idx=u_idx,
+        off_dst=_outer_offsets(a.iter_out, a.iter_in,
+                               a.dst_factor_out, a.dst_factor_in),
+        off_src=_outer_offsets(a.iter_out, a.iter_in,
+                               a.src_factor_out, a.src_factor_in),
+        loop_count=a.iter_out * a.iter_in * n_uop)
+
+
+def compile_plan(cfg: VTAConfig, instructions) -> InstructionPlan:
+    """Decode an instruction stream into its array-form execution plan."""
+    steps: List[Tuple[object, object]] = []
+    for insn in instructions:
+        if isinstance(insn, isa.MemInsn):
+            step = (_compile_load(cfg, insn)
+                    if insn.opcode == isa.Opcode.LOAD
+                    else _compile_store(cfg, insn))
+        elif isinstance(insn, isa.GemInsn):
+            step = _compile_gemm(insn)
+        elif isinstance(insn, isa.AluInsn):
+            step = _compile_alu(insn)
+        elif isinstance(insn, isa.FinishInsn):
+            step = _FinishStep()
+        else:
+            raise TypeError(insn)
+        steps.append((insn, step))
+    return InstructionPlan(steps=steps)
+
+
+def plan_for(prog) -> InstructionPlan:
+    """Cached plan for a :class:`~repro.core.program.VTAProgram`.
+
+    Recompiled when the instruction list changes (count or object
+    identity).  Dependency flags are read live, so dep mutations need no
+    invalidation; editing *geometry* fields of an existing instruction in
+    place is not detected — call :func:`invalidate_plan` afterwards.
+    """
+    plan = getattr(prog, "_fast_plan", None)
+    if (plan is None or plan.n_insns != len(prog.instructions)
+            or any(step_insn is not insn for (step_insn, _), insn
+                   in zip(plan.steps, prog.instructions))):
+        plan = compile_plan(prog.config, prog.instructions)
+        prog._fast_plan = plan
+    return plan
+
+
+def invalidate_plan(prog) -> None:
+    if hasattr(prog, "_fast_plan"):
+        del prog._fast_plan
+
+
+# ---------------------------------------------------------------------------
+# Scatter helpers (order-independent merges, exact modulo 2**32)
+# ---------------------------------------------------------------------------
+
+def _group(idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sort ``idx``; return (order, sorted idx, group-start positions)."""
+    order = np.argsort(idx, kind="stable")
+    sidx = idx[order]
+    starts = np.flatnonzero(np.r_[True, sidx[1:] != sidx[:-1]])
+    return order, sidx, starts
+
+
+def _scatter_add(acc64: np.ndarray, idx: np.ndarray, vals: np.ndarray) -> None:
+    """``acc64[idx] += vals`` with duplicate destinations merged first."""
+    if idx.size == 0:
+        return
+    order, sidx, starts = _group(idx)
+    acc64[sidx[starts]] += np.add.reduceat(vals[order], starts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+class FastSimulator:
+    """Vectorized VTA functional simulator — bit-exact vs the oracle."""
+
+    def __init__(self, cfg: VTAConfig, dram: np.ndarray, *,
+                 trace: bool = False):
+        if dram.dtype != np.uint8:
+            raise TypeError("dram image must be uint8")
+        self.cfg = cfg
+        self.dram = dram.copy()
+        self.trace = trace
+        bs = cfg.block_size
+        self.uop_buf = np.zeros((cfg.uop_buff_entries, 3), dtype=np.int64)
+        self.inp_buf = np.zeros((cfg.inp_buff_vectors, bs), dtype=np.int8)
+        self.wgt_buf = np.zeros((cfg.wgt_buff_matrices, bs, bs), dtype=np.int8)
+        self.acc_buf = np.zeros((cfg.acc_buff_vectors, bs), dtype=np.int32)
+        self.out_buf = np.zeros((cfg.out_buff_vectors, bs), dtype=np.int8)
+        self.tokens = TokenQueues()
+        self.report = SimReport()
+
+    # -------------------------------------------------------------- mem --
+    def _buf_of(self, kind: str) -> np.ndarray:
+        return {"uop": self.uop_buf, "inp": self.inp_buf,
+                "wgt": self.wgt_buf, "acc": self.acc_buf,
+                "out": self.out_buf}[kind]
+
+    def _decode_structs(self, kind: str, raw: np.ndarray) -> np.ndarray:
+        """(n, nbytes) uint8 → n structures in SRAM form."""
+        n = raw.shape[0]
+        bs = self.cfg.block_size
+        if kind == "uop":
+            words = raw.view("<u4").reshape(n).astype(np.int64)
+            return np.stack([words & 0x7FF, (words >> 11) & 0x7FF,
+                             (words >> 22) & 0x3FF], axis=1)
+        if kind == "inp":
+            return raw.view(np.int8).reshape(n, bs)
+        if kind == "wgt":
+            return raw.view(np.int8).reshape(n, bs, bs)
+        if kind == "acc":
+            return raw.view("<i4").reshape(n, bs).astype(np.int32)
+        raise ValueError(kind)
+
+    def _encode_structs(self, kind: str, data: np.ndarray) -> np.ndarray:
+        """n structures → (n, nbytes) uint8 (little-endian)."""
+        n = data.shape[0]
+        if kind in ("inp", "out"):
+            return np.ascontiguousarray(data).view(np.uint8).reshape(n, -1)
+        if kind == "wgt":
+            return np.ascontiguousarray(data).view(np.uint8).reshape(n, -1)
+        if kind == "acc":
+            return np.ascontiguousarray(
+                data.astype("<i4")).view(np.uint8).reshape(n, -1)
+        raise ValueError(kind)
+
+    def _exec_load(self, p: _LoadStep) -> None:
+        if p.end_byte > len(self.dram):
+            raise IndexError(
+                f"DRAM read out of range: {p.kind} load ends @{p.end_byte:#x}")
+        buf = self._buf_of(p.kind)
+        if p.zero_len:
+            buf[p.zero_base:p.zero_base + p.zero_len] = 0
+        if p.sram_idx.size:
+            raw = self.dram[p.byte_idx]
+            buf[p.sram_idx] = self._decode_structs(p.kind, raw)
+        self.report.dram_bytes_read += p.byte_idx.size
+
+    def _exec_store(self, p: _StoreStep) -> None:
+        if p.n == 0:
+            return            # degenerate geometry: the oracle's loop is empty
+        if p.end_byte > len(self.dram):
+            raise IndexError(
+                f"DRAM write out of range: {p.kind} store ends "
+                f"@{p.end_byte:#x}")
+        buf = self._buf_of(p.kind)
+        data = buf[p.sram_base:p.sram_base + p.n]
+        if data.shape[0] < p.n:
+            raise IndexError(f"SRAM read out of range: {p.kind} store")
+        raw = self._encode_structs(p.kind, data)
+        if p.byte_idx is not None:
+            self.dram[p.byte_idx] = raw
+        else:                      # overlapping rows: write in order
+            rows = raw.reshape(-1, p.row_bytes)
+            for start, row in zip(p.row_dram_starts, rows):
+                self.dram[start:start + p.row_bytes] = row
+        self.report.dram_bytes_written += raw.size
+
+    # ------------------------------------------------------------- gemm --
+    def _lattice(self, off: np.ndarray, u_field: np.ndarray) -> np.ndarray:
+        """(P,) outer offsets × (nu,) uop bases → (P·nu,) ravelled indices
+        in the oracle's loop order (i_out, i_in, u)."""
+        return (off[:, None] + u_field[None, :]).reshape(-1)
+
+    def _exec_gemm(self, p: _GemmStep) -> None:
+        if p.loop_count == 0:
+            return
+        uop = self.uop_buf[p.u_idx]                      # (nu, 3)
+        x_idx = self._lattice(p.off_acc, uop[:, 0])
+        if p.reset:
+            self.acc_buf[x_idx] = 0
+            self.report.gemm_reset_loops += p.loop_count
+            return
+        a_idx = self._lattice(p.off_inp, uop[:, 1])
+        w_idx = self._lattice(p.off_wgt, uop[:, 2])
+        bs = self.cfg.block_size
+        chunk = max(1, _GEMM_CHUNK_BYTES // (bs * bs * 8))
+        acc64 = self.acc_buf.astype(np.int64)
+        for lo in range(0, x_idx.size, chunk):
+            sl = slice(lo, lo + chunk)
+            A = self.inp_buf[a_idx[sl]].astype(np.int64)     # (l, bs)
+            W = self.wgt_buf[w_idx[sl]].astype(np.int64)     # (l, bs, bs)
+            # out[l, i] = Σ_j A[l, j] · W[l, i, j]  (W stored transposed)
+            prod = np.einsum("lij,lj->li", W, A)
+            _scatter_add(acc64, x_idx[sl], prod)
+        self.acc_buf[:] = acc64.astype(np.int32)             # wrap-around
+        self.report.gemm_loops += p.loop_count
+
+    # -------------------------------------------------------------- alu --
+    @staticmethod
+    def _alu_elementwise(op: isa.AluOp, x: np.ndarray, y) -> np.ndarray:
+        if op == isa.AluOp.MIN:
+            return np.minimum(x, y)
+        if op == isa.AluOp.MAX:
+            return np.maximum(x, y)
+        if op == isa.AluOp.ADD:
+            return x + y
+        if op == isa.AluOp.SHR:
+            return x >> (y & 31)
+        raise ValueError(op)
+
+    def _exec_alu(self, p: _AluStep) -> None:
+        if p.loop_count == 0:
+            return
+        uop = self.uop_buf[p.u_idx]
+        d_idx = self._lattice(p.off_dst, uop[:, 0])
+        acc64 = self.acc_buf.astype(np.int64)
+        if p.use_imm:
+            self._alu_imm(acc64, p, d_idx)
+        else:
+            s_idx = self._lattice(p.off_src, uop[:, 1])
+            if np.intersect1d(d_idx, s_idx).size:
+                # Read-after-write across lattice points: oracle order.
+                self._alu_sequential(acc64, p.op, d_idx, s_idx)
+            else:
+                self._alu_pair(acc64, p.op, d_idx, s_idx)
+        self.acc_buf[:] = acc64.astype(np.int32)
+        self.report.alu_loops += p.loop_count
+
+    def _alu_imm(self, acc64: np.ndarray, p: _AluStep,
+                 d_idx: np.ndarray) -> None:
+        imm = np.int64(p.imm)
+        order, sidx, starts = _group(d_idx)
+        ud = sidx[starts]
+        if p.op in (isa.AluOp.MIN, isa.AluOp.MAX):
+            # Idempotent under repetition.
+            acc64[ud] = self._alu_elementwise(p.op, acc64[ud], imm)
+        elif p.op == isa.AluOp.ADD:
+            counts = np.diff(np.r_[starts, d_idx.size]).astype(np.int64)
+            acc64[ud] += imm * counts[:, None]
+        else:  # SHR: k repeated c times on an int32-range value = shift c·k
+            counts = np.diff(np.r_[starts, d_idx.size]).astype(np.int64)
+            shift = np.minimum((imm & 31) * counts, 63)
+            acc64[ud] >>= shift[:, None]
+
+    def _alu_pair(self, acc64: np.ndarray, op: isa.AluOp,
+                  d_idx: np.ndarray, s_idx: np.ndarray) -> None:
+        """Sources disjoint from destinations: pre-state gather is exact."""
+        svals = acc64[s_idx]                              # (L, bs)
+        order, sidx, starts = _group(d_idx)
+        ud = sidx[starts]
+        svals = svals[order]
+        if op == isa.AluOp.ADD:
+            acc64[ud] += np.add.reduceat(svals, starts, axis=0)
+        elif op == isa.AluOp.MIN:
+            acc64[ud] = np.minimum(acc64[ud],
+                                   np.minimum.reduceat(svals, starts, axis=0))
+        elif op == isa.AluOp.MAX:
+            acc64[ud] = np.maximum(acc64[ud],
+                                   np.maximum.reduceat(svals, starts, axis=0))
+        else:  # SHR: per-lane shifts accumulate across duplicates
+            shift = np.minimum(
+                np.add.reduceat(svals & 31, starts, axis=0), 63)
+            acc64[ud] >>= shift
+
+    def _alu_sequential(self, acc64: np.ndarray, op: isa.AluOp,
+                        d_idx: np.ndarray, s_idx: np.ndarray) -> None:
+        """Oracle loop order for lattices with cross-point dependencies.
+
+        Each step wraps to int32 before the next reads it, exactly as the
+        hardware (and the oracle) would."""
+        for d, s in zip(d_idx, s_idx):
+            x = acc64[d]
+            y = acc64[s]
+            acc64[d] = self._alu_elementwise(op, x, y).astype(
+                np.int32).astype(np.int64)
+
+    # -------------------------------------------------------------- run --
+    def _commit_out(self) -> None:
+        """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
+        self.out_buf[:] = (self.acc_buf & 0xFF).astype(np.uint8).view(np.int8)
+
+    def run(self, instructions, plan: Optional[InstructionPlan] = None
+            ) -> SimReport:
+        """Execute an instruction stream.  Pass a cached ``plan`` (from
+        :func:`plan_for` / :func:`compile_plan`) to skip plan compilation;
+        it must have been compiled from these instructions."""
+        if plan is None:
+            plan = compile_plan(self.cfg, instructions)
+        elif plan.n_insns != len(instructions):
+            raise ValueError("plan does not match instruction stream")
+        for insn, step in plan.steps:
+            self.tokens.pre(insn)
+            if isinstance(step, _LoadStep):
+                self._exec_load(step)
+                tag = f"{insn.opcode.name} {insn.memory_type.name}"
+            elif isinstance(step, _StoreStep):
+                self._commit_out()
+                self._exec_store(step)
+                tag = f"{insn.opcode.name} {insn.memory_type.name}"
+            elif isinstance(step, _GemmStep):
+                self._exec_gemm(step)
+                tag = f"GEMM{' reset' if step.reset else ''}"
+            elif isinstance(step, _AluStep):
+                self._exec_alu(step)
+                tag = f"ALU {step.op.name}"
+            else:
+                tag = "FINISH"
+            self.report.insn_executed += 1
+            if self.trace:
+                self.report.insn_trace.append(tag)
+            self.tokens.post(insn)
+            if isinstance(step, _FinishStep):
+                break
+        return self.report

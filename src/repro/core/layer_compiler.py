@@ -214,6 +214,14 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
                          ref_output_matrix=ref)
 
 
+def verify_layer(layer: CompiledLayer, *, backend: str = "oracle"):
+    """Run one compiled layer's program on the chosen simulator backend and
+    assert it reproduces the compiler's expected OUT region.  Returns the
+    :class:`~repro.core.simulator.SimReport`."""
+    from .simulator import verify_program
+    return verify_program(layer.program, backend=backend)
+
+
 def decode_layer_output(layer: CompiledLayer, out_matrix: np.ndarray
                         ) -> np.ndarray:
     """§4.2 host reshaping, stage (i)+(ii) entry: from the decoded (M, N)

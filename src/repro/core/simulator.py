@@ -3,8 +3,9 @@
 Replaces the paper's extracted C++ functional simulator with a pure-numpy
 interpreter that consumes exactly the artefacts the compiler emits: a DRAM
 image (or the per-region segments) plus the instruction stream.  It is the
-*oracle* every other execution path (vectorised JAX interpreter, Pallas
-kernels) is validated against.
+*oracle* every other execution path is validated against.  The vectorised
+fast path lives in :mod:`repro.core.fast_simulator`; select it with
+``run_program(prog, backend="fast")`` (or ``make_simulator``).
 
 Semantics implemented:
 
@@ -37,6 +38,61 @@ from .program import VTAProgram
 class VTAHazardError(RuntimeError):
     """A dependency-token pop on an empty queue: the instruction stream
     would deadlock the Load/Compute/Store modules on real hardware."""
+
+
+def module_of(insn) -> str:
+    """Which VTA module executes ``insn`` (mirrors the VTA runtime):
+    LOAD INP/WGT run on Load; LOAD UOP/ACC, GEMM and ALU on Compute;
+    STORE OUT on Store."""
+    if isinstance(insn, isa.MemInsn):
+        if insn.opcode == isa.Opcode.STORE:
+            return "store"
+        if insn.memory_type in (isa.MemId.INP, isa.MemId.WGT):
+            return "load"
+        return "compute"
+    return "compute"           # GEMM / ALU / FINISH
+
+
+class TokenQueues:
+    """The 4 producer/consumer dependency-token queues of §2.3, modelled as
+    counters.  Shared by every simulator backend: a pop on an empty queue
+    means the compiler emitted a hazard (real hardware would deadlock)."""
+
+    _PREV = {"load": None, "compute": "load", "store": "compute"}
+    _NEXT = {"load": "compute", "compute": "store", "store": None}
+
+    def __init__(self) -> None:
+        self.counters: Dict[Tuple[str, str], int] = {
+            ("load", "compute"): 0, ("compute", "load"): 0,
+            ("compute", "store"): 0, ("store", "compute"): 0,
+        }
+
+    def _pop(self, src: Optional[str], dst: str) -> None:
+        if src is None:
+            raise VTAHazardError(f"{dst}: pop from nonexistent neighbour")
+        if self.counters[(src, dst)] <= 0:
+            raise VTAHazardError(
+                f"dependency hazard: {dst} pops empty queue from {src}")
+        self.counters[(src, dst)] -= 1
+
+    def _push(self, src: str, dst: Optional[str]) -> None:
+        if dst is None:
+            raise VTAHazardError(f"{src}: push to nonexistent neighbour")
+        self.counters[(src, dst)] += 1
+
+    def pre(self, insn) -> None:
+        mod = module_of(insn)
+        if insn.dep.pop_prev:
+            self._pop(self._PREV[mod], mod)
+        if insn.dep.pop_next:
+            self._pop(self._NEXT[mod], mod)
+
+    def post(self, insn) -> None:
+        mod = module_of(insn)
+        if insn.dep.push_prev:
+            self._push(mod, self._PREV[mod])
+        if insn.dep.push_next:
+            self._push(mod, self._NEXT[mod])
 
 
 @dataclasses.dataclass
@@ -76,59 +132,9 @@ class FunctionalSimulator:
         self.wgt_buf = np.zeros((cfg.wgt_buff_matrices, bs, bs), dtype=np.int8)
         self.acc_buf = np.zeros((cfg.acc_buff_vectors, bs), dtype=np.int32)
         self.out_buf = np.zeros((cfg.out_buff_vectors, bs), dtype=np.int8)
-        # Dependency-token queues between modules (§2.3).  Keyed by
-        # (producer, consumer); counters model the hardware FIFOs.
-        self.queues: Dict[Tuple[str, str], int] = {
-            ("load", "compute"): 0, ("compute", "load"): 0,
-            ("compute", "store"): 0, ("store", "compute"): 0,
-        }
+        # Dependency-token queues between modules (§2.3).
+        self.tokens = TokenQueues()
         self.report = SimReport()
-
-    # ------------------------------------------------------------------
-    # Token handling.  Module assignment mirrors the VTA runtime: LOAD INP/
-    # WGT run on the Load module; LOAD UOP/ACC, GEMM and ALU on Compute;
-    # STORE OUT on Store.  prev/next are relative to the pipeline order
-    # Load -> Compute -> Store.
-    # ------------------------------------------------------------------
-    @staticmethod
-    def _module_of(insn) -> str:
-        if isinstance(insn, isa.MemInsn):
-            if insn.opcode == isa.Opcode.STORE:
-                return "store"
-            if insn.memory_type in (isa.MemId.INP, isa.MemId.WGT):
-                return "load"
-            return "compute"
-        return "compute"           # GEMM / ALU / FINISH
-
-    _PREV = {"load": None, "compute": "load", "store": "compute"}
-    _NEXT = {"load": "compute", "compute": "store", "store": None}
-
-    def _pop(self, src: Optional[str], dst: str) -> None:
-        if src is None:
-            raise VTAHazardError(f"{dst}: pop from nonexistent neighbour")
-        if self.queues[(src, dst)] <= 0:
-            raise VTAHazardError(
-                f"dependency hazard: {dst} pops empty queue from {src}")
-        self.queues[(src, dst)] -= 1
-
-    def _push(self, src: str, dst: Optional[str]) -> None:
-        if dst is None:
-            raise VTAHazardError(f"{src}: push to nonexistent neighbour")
-        self.queues[(src, dst)] += 1
-
-    def _handle_deps_pre(self, insn) -> None:
-        mod = self._module_of(insn)
-        if insn.dep.pop_prev:
-            self._pop(self._PREV[mod], mod)
-        if insn.dep.pop_next:
-            self._pop(self._NEXT[mod], mod)
-
-    def _handle_deps_post(self, insn) -> None:
-        mod = self._module_of(insn)
-        if insn.dep.push_prev:
-            self._push(mod, self._PREV[mod])
-        if insn.dep.push_next:
-            self._push(mod, self._NEXT[mod])
 
     # ------------------------------------------------------------------
     # Memory instructions
@@ -261,7 +267,9 @@ class FunctionalSimulator:
                     elif a.alu_opcode == isa.AluOp.ADD:
                         r = x + y
                     elif a.alu_opcode == isa.AluOp.SHR:
-                        r = x >> (y & 31) if a.use_imm else x >> (y & 31)
+                        # y is the immediate or the acc[s] vector; either
+                        # way the shift amount is the low 5 bits.
+                        r = x >> (y & 31)
                     else:
                         raise ValueError(a.alu_opcode)
                     self.acc_buf[d] = _wrap32(r)
@@ -274,7 +282,7 @@ class FunctionalSimulator:
 
     def run(self, instructions) -> SimReport:
         for insn in instructions:
-            self._handle_deps_pre(insn)
+            self.tokens.pre(insn)
             if isinstance(insn, isa.MemInsn):
                 if insn.opcode == isa.Opcode.STORE:
                     self._commit_out()
@@ -293,25 +301,63 @@ class FunctionalSimulator:
             self.report.insn_executed += 1
             if self.trace:
                 self.report.insn_trace.append(tag)
-            self._handle_deps_post(insn)
+            self.tokens.post(insn)
             if isinstance(insn, isa.FinishInsn):
                 break
         return self.report
 
 
 # ---------------------------------------------------------------------------
-# Program-level drivers
+# Backend selection + program-level drivers
 # ---------------------------------------------------------------------------
 
-def run_program(prog: VTAProgram, *, trace: bool = False
-                ) -> Tuple[np.ndarray, SimReport]:
+BACKENDS = ("oracle", "fast")
+
+
+def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
+                   backend: str = "oracle", trace: bool = False):
+    """Instantiate a simulator backend over a DRAM image.
+
+    ``"oracle"`` is the per-struct Python interpreter above — the
+    correctness anchor.  ``"fast"`` is the vectorised plan-compiling
+    interpreter of :mod:`repro.core.fast_simulator`, bit-exact against the
+    oracle but executing each instruction as batched numpy ops.
+    """
+    if backend == "oracle":
+        return FunctionalSimulator(cfg, dram, trace=trace)
+    if backend == "fast":
+        from .fast_simulator import FastSimulator
+        return FastSimulator(cfg, dram, trace=trace)
+    raise ValueError(f"unknown simulator backend {backend!r}; "
+                     f"expected one of {BACKENDS}")
+
+
+def run_instructions(sim, instructions, *, program: Optional[VTAProgram] = None
+                     ) -> SimReport:
+    """Run an instruction stream on either backend.
+
+    On the fast backend, passing ``program`` reuses (or populates) the
+    instruction plan cached on it, so repeated executions of the same
+    program (batch serving) skip plan compilation entirely.
+    """
+    from .fast_simulator import FastSimulator, plan_for
+    if isinstance(sim, FastSimulator) and program is not None:
+        return sim.run(instructions, plan=plan_for(program))
+    return sim.run(instructions)
+
+
+def run_program(prog: VTAProgram, *, trace: bool = False,
+                backend: str = "oracle") -> Tuple[np.ndarray, SimReport]:
     """Execute a compiled program; return (decoded result matrix, report).
 
     The decoded matrix is the *unpadded* (M, N) int8 result, reconstructed
     from the OUT region exactly as the §4.2 host-side reshaping does.
+    ``backend="fast"`` selects the vectorised interpreter with the plan
+    cached on ``prog``.
     """
-    sim = FunctionalSimulator(prog.config, prog.dram_image(), trace=trace)
-    report = sim.run(prog.instructions)
+    sim = make_simulator(prog.config, prog.dram_image(),
+                         backend=backend, trace=trace)
+    report = run_instructions(sim, prog.instructions, program=prog)
     out = decode_out_region(prog, sim.dram)
     return out, report
 
@@ -335,9 +381,10 @@ def decode_out_region(prog: VTAProgram, dram: np.ndarray) -> np.ndarray:
     return np.ascontiguousarray(full[:m, :n])
 
 
-def verify_program(prog: VTAProgram, *, trace: bool = False) -> SimReport:
+def verify_program(prog: VTAProgram, *, trace: bool = False,
+                   backend: str = "oracle") -> SimReport:
     """Run + assert the simulator output equals the compiler's oracle."""
-    out, report = run_program(prog, trace=trace)
+    out, report = run_program(prog, trace=trace, backend=backend)
     m, n = prog.output_meta.valid_shape
     expected = prog.expected_out[:m, :n]
     np.testing.assert_array_equal(out, expected,

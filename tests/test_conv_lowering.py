@@ -1,6 +1,8 @@
 """Tensor→matrix lowering tests (paper §4.1, Def. 3)."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.conv_lowering import (avgpool2x2_plan, conv2d_reference,

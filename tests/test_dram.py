@@ -1,6 +1,7 @@
 """DRAM allocator tests — paper §2.2 Fig. 2 verbatim + Def. 1 properties."""
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dram import DramAllocator

@@ -3,6 +3,7 @@ the bit-accurate functional simulator and checked against the numpy oracle."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core import isa

@@ -1,6 +1,8 @@
 """Data-definition tests (paper §3.2): padding / splitting / binarisation."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.layout import (binarize_blocks, debinarize_blocks,
