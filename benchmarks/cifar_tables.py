@@ -1,0 +1,62 @@
+"""CIFAR-10-scale CNN benchmarks — the multi-chunk workload (DESIGN.md §3).
+
+No paper column here: the paper stops at LeNet-5 and only claims "strong
+potential for scaling"; these rows document what the scaled pipeline
+actually does — per-layer chunk counts, total GeMM loops, the
+compute-module LOAD overhead the multi-chunk schedule adds, and fast-
+backend serving throughput (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.cycle_model import FPGA_CLOCK_HZ
+from repro.core.network_compiler import compile_network
+from repro.models.cifar_cnn import (calibrate_shifts,
+                                    cifar_cnn_random_weights,
+                                    cifar_cnn_specs, synthetic_cifar_image)
+
+
+def _network(seed: int = 0):
+    weights = cifar_cnn_random_weights(seed)
+    shifts = calibrate_shifts(weights,
+                              [synthetic_cifar_image(s) for s in range(1, 4)])
+    return compile_network(cifar_cnn_specs(weights, shifts),
+                           synthetic_cifar_image(seed))
+
+
+def all_tables() -> List[Dict]:
+    t0 = time.perf_counter()
+    net = _network()
+    compile_s = time.perf_counter() - t0
+    rows: List[Dict] = []
+    for layer, chunks, loops in zip(net.layers, net.chunks_per_layer(),
+                                    net.gemm_loops_per_layer()):
+        rows.append({"name": f"cifar/chunks/{layer.spec.name}",
+                     "value": chunks, "paper": None})
+        rows.append({"name": f"cifar/gemm_loops/{layer.spec.name}",
+                     "value": loops, "paper": None})
+    rows.append({"name": "cifar/gemm_loops/total", "value": net.gemm_loops(),
+                 "paper": None})
+    cr = net.cycle_report()
+    rows.append({"name": "cifar/cycles/total_compute",
+                 "value": cr.total_compute_cycles, "paper": None})
+    rows.append({"name": "cifar/cycles/compute_loads",
+                 "value": cr.compute_load_cycles, "paper": None})
+    rows.append({"name": "cifar/exec_us@650MHz",
+                 "value": round(cr.execution_time_s(
+                     FPGA_CLOCK_HZ, include_loads=True) * 1e6, 2),
+                 "paper": None})
+    rows.append({"name": "cifar/compile_wall_s",
+                 "value": round(compile_s, 3), "paper": None})
+    net.run_functional(check_chaining=False, backend="fast")   # warm plans
+    t0 = time.perf_counter()
+    net.run_functional(check_chaining=False, backend="fast")
+    dt = time.perf_counter() - t0
+    rows.append({"name": "cifar/funcsim/fast/wall_s",
+                 "value": round(dt, 4), "paper": None})
+    rows.append({"name": "cifar/funcsim/fast/gemm_loops_per_s",
+                 "value": int(net.gemm_loops() / dt), "paper": None})
+    return rows

@@ -1,0 +1,107 @@
+"""CIFAR-10-scale CNN end-to-end: the first workload past LeNet-5.
+
+This is the scaling demonstration of DESIGN.md §3: same-padded
+convolutions, max pooling, and layer matrices that no longer fit one SRAM
+residency.  Layer 1 (conv 3→64 k5, same padding) lowers to a 1024×75
+input matrix — 5120 INP vectors against a 2048-vector buffer — so its
+program is multi-chunk *by construction*, with the pool/requant ALU uops
+re-indexed against each chunk's local ACC window.
+
+  1. calibrate static requant shifts over a held-out image set (§4.2);
+  2. compile all 5 layers into one shared DRAM allocation (Fig. 12) and
+     report the per-layer chunk/uop/wave statistics;
+  3. verify the chain bit-exactly on the fast backend — and, unless
+     ``--skip-oracle``, on the oracle too, asserting both backends agree
+     byte-for-byte;
+  4. serve a batch of classification requests against the integer
+     reference.
+
+    PYTHONPATH=src python examples/cifar10_cnn_e2e.py [--requests 4]
+                                                      [--backend fast|oracle]
+                                                      [--skip-oracle]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.cycle_model import FPGA_CLOCK_HZ
+from repro.core.network_compiler import compile_network
+from repro.models.cifar_cnn import (calibrate_shifts,
+                                    cifar_cnn_random_weights,
+                                    cifar_cnn_specs, reference_forward_int8,
+                                    synthetic_cifar_image)
+
+
+def layer_stats(net) -> None:
+    print("layer      chunks  gemm_loops  uops   uop_waves")
+    for layer in net.layers:
+        prog = layer.program
+        waves = sum(1 for i in prog.instructions
+                    if isinstance(i, isa.MemInsn)
+                    and i.memory_type == isa.MemId.UOP) - 1
+        print(f"  {layer.spec.name:<9}{layer.n_chunks:>5}"
+              f"{prog.gemm_loops():>12}{len(prog.uops):>7}{waves:>10}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--backend", choices=("fast", "oracle"), default="fast",
+                    help="backend for the request-serving loop")
+    ap.add_argument("--skip-oracle", action="store_true",
+                    help="skip the oracle cross-check (CI smoke mode)")
+    args = ap.parse_args()
+
+    weights = cifar_cnn_random_weights(seed=0)
+    print("calibrating static requant shifts (§4.2)...")
+    cal = [synthetic_cifar_image(s) for s in range(1, 9)]
+    shifts = calibrate_shifts(weights, cal)
+
+    print("compiling the CIFAR-10 CNN through the VTA pipeline...")
+    t0 = time.perf_counter()
+    net = compile_network(cifar_cnn_specs(weights, shifts),
+                          synthetic_cifar_image(0))
+    print(f"  compiled in {time.perf_counter() - t0:.3f}s; "
+          f"total GeMM loops = {net.gemm_loops()} "
+          f"(LeNet-5 was 2942 — ~{net.gemm_loops() / 2942:.0f}x larger)")
+    layer_stats(net)
+    assert max(net.chunks_per_layer()) > 1, "expected a multi-chunk layer"
+    cr = net.cycle_report()
+    print(f"  compute cycles = {cr.total_compute_cycles} "
+          f"(+{cr.compute_load_cycles} UOP/ACC-load) → "
+          f"{cr.execution_time_s(include_loads=True) * 1e6:.1f} µs @650 MHz")
+
+    print("verifying the chain (fast backend)...")
+    out_fast, _ = net.verify(backend="fast")
+    if not args.skip_oracle:
+        print("verifying the chain (oracle backend)...")
+        out_oracle, _ = net.verify(backend="oracle")
+        np.testing.assert_array_equal(out_oracle, out_fast)
+        print("  oracle and fast backends agree bit-for-bit")
+
+    try:                            # repo root on sys.path (pytest / -m)
+        from examples.lenet5_e2e import serve_request
+    except ImportError:             # run as python examples/cifar10_cnn_e2e.py
+        from lenet5_e2e import serve_request
+    rng = np.random.default_rng(42)
+    serve_s = 0.0
+    for r in range(args.requests):
+        img = rng.integers(-64, 64, (1, 3, 32, 32)).astype(np.int8)
+        t0 = time.perf_counter()
+        logits = serve_request(net, img, backend=args.backend)
+        serve_s += time.perf_counter() - t0
+        ref_logits, _ = reference_forward_int8(
+            weights, img, [l.requant_shift for l in net.layers])
+        assert np.array_equal(logits, ref_logits), f"request {r}: mismatch!"
+    if args.requests:
+        print(f"\nserved {args.requests} requests in {serve_s:.2f}s "
+              f"({args.requests / serve_s:.1f} req/s on the {args.backend} "
+              f"backend); bit-exact vs integer reference: "
+              f"{args.requests}/{args.requests}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,14 @@
 
 Conventions (NCHW, batch = 1 as in the paper's experiments):
 
-* ``im2row``  — input tensor ``(1, C, H, W)`` with a ``kh×kw`` kernel and
-  stride ``s`` becomes the ``(H'·W') × (C·kh·kw)`` input matrix ``A``; one
-  row per output spatial position (row-major over (i, j)), patch elements
-  channel-major then kernel-row then kernel-col — matching ``ker2col``.
+* ``im2row``  — input tensor ``(1, C, H, W)`` with a ``kh×kw`` kernel,
+  stride ``s`` and symmetric zero-padding ``pad`` becomes the
+  ``(H'·W') × (C·kh·kw)`` input matrix ``A``; one row per output spatial
+  position (row-major over (i, j)), patch elements channel-major then
+  kernel-row then kernel-col — matching ``ker2col``.  ``pad > 0`` is the
+  zero-padded ("same") convolution needed past LeNet-5 (DESIGN.md §3): the
+  padding is materialised host-side before patch extraction, so the VTA
+  program is unchanged — only the A matrix grows.
 * ``ker2col`` — weight tensor ``(F, C, kh, kw)`` becomes the
   ``(C·kh·kw) × F`` weight matrix ``B`` (filter ``f`` in column ``f``).
 * ``mat2tensor`` — output matrix ``(H'·W') × F`` back to ``(1, F, H', W')``.
@@ -24,7 +28,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class ConvGeometry:
-    """Spatial geometry of one convolution (valid padding)."""
+    """Spatial geometry of one convolution (``pad=0`` → valid padding;
+    ``pad=(k-1)//2`` with stride 1 → same padding)."""
 
     in_channels: int
     in_h: int
@@ -32,14 +37,15 @@ class ConvGeometry:
     kh: int
     kw: int
     stride: int = 1
+    pad: int = 0
 
     @property
     def out_h(self) -> int:
-        return (self.in_h - self.kh) // self.stride + 1
+        return (self.in_h + 2 * self.pad - self.kh) // self.stride + 1
 
     @property
     def out_w(self) -> int:
-        return (self.in_w - self.kw) // self.stride + 1
+        return (self.in_w + 2 * self.pad - self.kw) // self.stride + 1
 
     @property
     def patch_len(self) -> int:
@@ -50,16 +56,25 @@ class ConvGeometry:
         return self.out_h * self.out_w
 
 
-def im2row(tensor: np.ndarray, kh: int, kw: int, stride: int = 1) -> np.ndarray:
+def _pad_spatial(tensor: np.ndarray, pad: int) -> np.ndarray:
+    if pad == 0:
+        return tensor
+    if pad < 0:
+        raise ValueError(f"negative padding {pad}")
+    return np.pad(tensor, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+
+
+def im2row(tensor: np.ndarray, kh: int, kw: int, stride: int = 1,
+           pad: int = 0) -> np.ndarray:
     """Input tensor ``(1, C, H, W)`` → input matrix ``(H'·W', C·kh·kw)``."""
     if tensor.ndim != 4 or tensor.shape[0] != 1:
         raise ValueError(f"expected (1, C, H, W) tensor, got {tensor.shape}")
     _, c, h, w = tensor.shape
-    geo = ConvGeometry(c, h, w, kh, kw, stride)
+    geo = ConvGeometry(c, h, w, kh, kw, stride, pad)
     oh, ow = geo.out_h, geo.out_w
     if oh <= 0 or ow <= 0:
-        raise ValueError("kernel larger than input")
-    x = tensor[0]
+        raise ValueError("kernel larger than (padded) input")
+    x = _pad_spatial(tensor, pad)[0]
     # Gather patches: rows ordered (i, j) row-major; patch channel-major.
     out = np.empty((oh * ow, geo.patch_len), dtype=tensor.dtype)
     r = 0
@@ -109,14 +124,14 @@ def flatten_tensor(tensor: np.ndarray) -> np.ndarray:
 
 
 def conv2d_reference(tensor: np.ndarray, weights: np.ndarray,
-                     stride: int = 1) -> np.ndarray:
+                     stride: int = 1, pad: int = 0) -> np.ndarray:
     """Direct int64 convolution oracle for Def.-3 property tests."""
     _, c, h, w = tensor.shape
     f, cw, kh, kw = weights.shape
     assert c == cw, (c, cw)
-    geo = ConvGeometry(c, h, w, kh, kw, stride)
+    geo = ConvGeometry(c, h, w, kh, kw, stride, pad)
     out = np.zeros((1, f, geo.out_h, geo.out_w), dtype=np.int64)
-    x = tensor[0].astype(np.int64)
+    x = _pad_spatial(tensor, pad)[0].astype(np.int64)
     wt = weights.astype(np.int64)
     for i in range(geo.out_h):
         for j in range(geo.out_w):
@@ -131,17 +146,19 @@ def conv2d_reference(tensor: np.ndarray, weights: np.ndarray,
 
 @dataclasses.dataclass(frozen=True)
 class PoolPlan:
-    """Average-pool 2×2/stride-2 as a VTA ALU program over ACC vectors.
+    """2×2/stride-2 pooling as a VTA ALU program over ACC vectors.
 
-    The conv-output matrix has one ACC vector per spatial position (β = 1
-    block column for every LeNet layer; for β > 1 the indices scale by the
-    block geometry — handled by the layer compiler).  Pooling accumulates
-    the 4 window members into the *first* member's vector (3 ADD pairs),
-    then divides by 4 with one SHR-2 (exact for the sum of four int32s in
-    range).  ``keep_rows`` lists the surviving matrix rows, in pooled
+    The conv-output matrix has one ACC vector per spatial position (per
+    block column; for β > 1 the indices scale by the block geometry —
+    handled by the layer compiler).  ``mode="avg"`` accumulates the 4
+    window members into the *first* member's vector (3 ADD pairs), then
+    divides by 4 with one SHR-2 (exact for the sum of four int32s in
+    range).  ``mode="max"`` reduces the window with 3 MAX pairs and needs
+    no division.  ``keep_rows`` lists the surviving matrix rows, in pooled
     row-major order — the host-side decode extracts exactly these rows
     (which is how the paper's layer-1 output is "decoded into a 196×6
-    matrix").
+    matrix").  On multi-chunk results the GEMM compiler keeps each window's
+    pairs inside one SRAM chunk (DESIGN.md §3).
     """
 
     add_pairs: Tuple[Tuple[int, int], ...]
@@ -149,11 +166,12 @@ class PoolPlan:
     keep_rows: Tuple[int, ...]
     out_h: int
     out_w: int
+    mode: str = "avg"              # "avg" | "max"
 
 
-def avgpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
+def _pool2x2_windows(in_h: int, in_w: int):
     if in_h % 2 or in_w % 2:
-        raise ValueError("avgpool2x2 requires even spatial dims")
+        raise ValueError("2x2 pooling requires even spatial dims")
     oh, ow = in_h // 2, in_w // 2
     pairs = []
     keep = []
@@ -164,5 +182,19 @@ def avgpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
             for src in members[1:]:
                 pairs.append((base, src))
             keep.append(base)
-    return PoolPlan(add_pairs=tuple(pairs), shr_indices=tuple(keep),
-                    keep_rows=tuple(keep), out_h=oh, out_w=ow)
+    return oh, ow, tuple(pairs), tuple(keep)
+
+
+def avgpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
+    """Average-pool 2×2/stride-2: 3 ADD pairs per window + SHR-2 (÷4)."""
+    oh, ow, pairs, keep = _pool2x2_windows(in_h, in_w)
+    return PoolPlan(add_pairs=pairs, shr_indices=keep, keep_rows=keep,
+                    out_h=oh, out_w=ow, mode="avg")
+
+
+def maxpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
+    """Max-pool 2×2/stride-2: 3 MAX pairs per window, no division —
+    the ALU MAX pair program of DESIGN.md §3 (YOLO-style downsampling)."""
+    oh, ow, pairs, keep = _pool2x2_windows(in_h, in_w)
+    return PoolPlan(add_pairs=pairs, shr_indices=keep, keep_rows=keep,
+                    out_h=oh, out_w=ow, mode="max")

@@ -54,6 +54,12 @@ class CycleReport:
     alu_insns: int
     reset_loops: int
     reset_insns: int
+    # Compute-module LOADs (UOP waves + ACC preloads).  Multi-chunk and
+    # uop-streaming programs (DESIGN.md §3) execute these on the Compute
+    # module; they are reported separately so the paper-calibrated
+    # ``total_compute_cycles`` stays comparable with §5.2.
+    compute_load_insns: int = 0
+    compute_load_structs: int = 0
 
     @property
     def tensor_gemm_cycles(self) -> int:
@@ -70,14 +76,36 @@ class CycleReport:
         return self.reset_loops + DECODE_CYCLES * self.reset_insns
 
     @property
+    def compute_load_cycles(self) -> int:
+        """Cycles the Compute module spends on LOAD UOP/ACC (1 cycle per
+        structure + decode) — the §3.3 uop-wave / ACC-preload overhead of
+        multi-chunk programs."""
+        return (self.compute_load_structs
+                + DECODE_CYCLES * self.compute_load_insns)
+
+    @property
     def total_compute_cycles(self) -> int:
         """Total Compute-module cycles (paper: 6358 for LeNet-5; excludes
-        Load/Store as in §5.2)."""
+        Load/Store as in §5.2, and the compute-module LOADs which the
+        paper's number does not break out — see
+        ``total_compute_cycles_with_loads``)."""
         return (self.tensor_gemm_cycles + self.tensor_alu_cycles
                 + self.reset_cycles)
 
-    def execution_time_s(self, clock_hz: float = FPGA_CLOCK_HZ) -> float:
-        return self.total_compute_cycles / clock_hz
+    @property
+    def total_compute_cycles_with_loads(self) -> int:
+        """§5.2 total plus the compute-module LOAD UOP/ACC cycles — the
+        honest multi-chunk figure (EXPERIMENTS.md §Paper)."""
+        return self.total_compute_cycles + self.compute_load_cycles
+
+    def execution_time_s(self, clock_hz: float = FPGA_CLOCK_HZ, *,
+                         include_loads: bool = False) -> float:
+        """Wall time at ``clock_hz``.  ``include_loads=True`` adds the
+        compute-module LOAD UOP/ACC cycles — the honest figure for
+        multi-chunk programs (EXPERIMENTS.md §Paper)."""
+        cycles = (self.total_compute_cycles_with_loads if include_loads
+                  else self.total_compute_cycles)
+        return cycles / clock_hz
 
     def simd_cpu_cycles(self, block_size: int,
                         macs_per_cycle: int = SIMD_MACS_PER_CYCLE) -> int:
@@ -101,6 +129,7 @@ class CycleReport:
 def analyze(instructions: Iterable[object]) -> CycleReport:
     gemm_loops = gemm_insns = alu_loops = alu_insns = 0
     reset_loops = reset_insns = 0
+    compute_load_insns = compute_load_structs = 0
     for i in instructions:
         if isinstance(i, isa.GemInsn):
             if i.reset:
@@ -112,9 +141,15 @@ def analyze(instructions: Iterable[object]) -> CycleReport:
         elif isinstance(i, isa.AluInsn):
             alu_loops += i.loop_count
             alu_insns += 1
+        elif (isinstance(i, isa.MemInsn) and i.opcode == isa.Opcode.LOAD
+              and i.memory_type in (isa.MemId.UOP, isa.MemId.ACC)):
+            compute_load_insns += 1
+            compute_load_structs += i.y_size * i.x_size
     return CycleReport(gemm_loops=gemm_loops, gemm_insns=gemm_insns,
                        alu_loops=alu_loops, alu_insns=alu_insns,
-                       reset_loops=reset_loops, reset_insns=reset_insns)
+                       reset_loops=reset_loops, reset_insns=reset_insns,
+                       compute_load_insns=compute_load_insns,
+                       compute_load_structs=compute_load_structs)
 
 
 def analyze_program(prog: VTAProgram) -> CycleReport:

@@ -35,6 +35,12 @@ order-independent merge can express (e.g. a vector-pair op whose source
 vectors are also destinations) fall back to a per-lattice-point loop with
 the oracle's exact semantics — correctness never depends on the compiler
 emitting "nice" programs.
+
+Multi-chunk uop-wave programs (DESIGN.md §3) need no special handling:
+plans precompute only the *geometry* lattices, while GEMM/ALU steps gather
+their uops from ``uop_buf`` at execution time — so mid-stream LOAD_UOP
+waves that rewrite slots 1.. between instructions are observed exactly as
+on the oracle, and the cached per-program plan stays valid across waves.
 """
 
 from __future__ import annotations
@@ -46,6 +52,7 @@ import numpy as np
 
 from . import isa
 from .hwconfig import VTAConfig
+from .layout import truncate_int8
 from .simulator import SimReport, TokenQueues, VTAHazardError  # noqa: F401
 
 # Bound the per-chunk gather footprint of the GEMM einsum (the WGT gather
@@ -478,7 +485,7 @@ class FastSimulator:
     # -------------------------------------------------------------- run --
     def _commit_out(self) -> None:
         """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
-        self.out_buf[:] = (self.acc_buf & 0xFF).astype(np.uint8).view(np.int8)
+        self.out_buf[:] = truncate_int8(self.acc_buf)
 
     def run(self, instructions, plan: Optional[InstructionPlan] = None
             ) -> SimReport:

@@ -11,6 +11,17 @@ post-ops down to a :class:`~repro.core.program.VTAProgram`:
   ``(ACC_IDX, INP_IDX, WGT_IDX) = ((i·β+j)·rh, (i·λ)·rh, j)``;
 * buffer-capacity chunking (§3.3: "If the data do not fit into the buffers,
   steps 2 to 5 must be repeated");
+* multi-chunk ALU re-indexing (DESIGN.md §3): indexed-imm and vector-pair
+  ALU programs carry *global* result-vector indices; for every SRAM chunk
+  the compiler rewrites them against the chunk's local ACC window, and the
+  chunk boundaries are aligned so that no (dst, src) pair ever straddles
+  two chunks;
+* UOP wave streaming (DESIGN.md §3): when a program needs more micro-ops
+  than the UOP buffer holds, the uop stream is split into *waves* — each
+  wave is a contiguous DRAM run loaded with a compute-module LOAD_UOP right
+  before the first instruction that consumes it (SRAM slot 0 permanently
+  holds the reset uop, so resets and simple-immediate ALU ops survive every
+  wave switch);
 * dependency flags wiring the Load/Compute/Store queues (§2.3), validated by
   the simulator's token checker.
 
@@ -62,9 +73,11 @@ class AluImmOp:
 class AluPairOp:
     """Vector-pair op ``acc[dst] = op(acc[dst], acc[src])`` over an explicit
     (dst, src) list — used for region ops such as average pooling (ADD
-    pairs followed by an ``AluIndexedImmOp`` SHR).  Indices are global
-    result-vector indices (block-major).  Only valid when the whole result
-    fits in one SRAM chunk."""
+    pairs followed by an ``AluIndexedImmOp`` SHR) or max pooling (MAX
+    pairs).  Indices are global result-vector indices (block-major); on
+    multi-chunk results each pair is re-indexed against the ACC window of
+    the chunk that holds it, and the chunk plan keeps both ends of a pair
+    inside the same chunk."""
 
     op: isa.AluOp
     pairs: Tuple[Tuple[int, int], ...]
@@ -72,7 +85,8 @@ class AluPairOp:
 
 @dataclasses.dataclass(frozen=True)
 class AluIndexedImmOp:
-    """Immediate op applied to an explicit list of result-vector indices."""
+    """Immediate op applied to an explicit list of result-vector indices.
+    Indices are global (block-major) and are re-indexed per chunk."""
 
     op: isa.AluOp
     imm: int
@@ -88,7 +102,13 @@ AluSpec = (AluImmOp, AluPairOp, AluIndexedImmOp)
 
 @dataclasses.dataclass(frozen=True)
 class ChunkPlan:
-    """How the α×λ×β block grid is tiled to fit the SRAM buffers."""
+    """How the α×λ×β block grid is tiled to fit the SRAM buffers.
+
+    ``alpha_segs``/``beta_segs`` are the actual ``(start, size)`` tilings
+    of the α/β axes.  Segments are at most ``alpha_c``/``beta_c`` wide but
+    may be smaller: when pair ALU programs are present the boundaries are
+    aligned so that no (dst, src) pair straddles two chunks (the
+    pool-window alignment of DESIGN.md §3)."""
 
     alpha: int
     lam: int
@@ -97,9 +117,13 @@ class ChunkPlan:
     lam_c: int
     beta_c: int
     row_height: int
+    alpha_segs: Tuple[Tuple[int, int], ...] = ()
+    beta_segs: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def n_chunks(self) -> int:
+        if self.alpha_segs and self.beta_segs:
+            return len(self.alpha_segs) * len(self.beta_segs)
         ceil = lambda a, b: -(-a // b)
         return ceil(self.alpha, self.alpha_c) * ceil(self.beta, self.beta_c)
 
@@ -109,9 +133,48 @@ class ChunkPlan:
             self.alpha, self.lam, self.beta)
 
 
+def _segment(total: int, chunk: int, groups: Sequence[Tuple[int, int]] = ()
+             ) -> Tuple[Tuple[int, int], ...]:
+    """Tile ``[0, total)`` into ``(start, size)`` runs of at most ``chunk``.
+
+    ``groups`` are inclusive ``(lo, hi)`` index intervals that must stay
+    within one run (pair ALU programs read both ends of a pair from the
+    same ACC window).  Boundaries are chosen greedily at the largest
+    admissible cut; a group wider than ``chunk`` is a hard error.
+    """
+    if not groups:
+        return tuple((s, min(chunk, total - s))
+                     for s in range(0, total, chunk))
+    ok = np.ones(total + 1, dtype=bool)
+    for lo, hi in groups:
+        ok[lo + 1:hi + 1] = False     # a cut at b splits (lo,hi) iff lo<b<=hi
+    segs: List[Tuple[int, int]] = []
+    cur = 0
+    while cur < total:
+        nxt = -1
+        for b in range(min(total, cur + chunk), cur, -1):
+            if ok[b]:
+                nxt = b
+                break
+        if nxt <= cur:
+            raise ValueError(
+                f"ALU pair group spans more than one SRAM chunk (chunk "
+                f"capacity {chunk} at offset {cur} of {total}); shrink the "
+                f"pair groups or use a larger accumulator buffer")
+        segs.append((cur, nxt - cur))
+        cur = nxt
+    return tuple(segs)
+
+
 def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
-                row_height: int) -> ChunkPlan:
-    """Greedy deterministic tiling honouring every buffer capacity."""
+                row_height: int, *,
+                row_groups: Sequence[Tuple[int, int]] = (),
+                col_groups: Sequence[Tuple[int, int]] = ()) -> ChunkPlan:
+    """Greedy deterministic tiling honouring every buffer capacity.
+
+    ``row_groups``/``col_groups`` are inclusive block-row/block-col
+    intervals that must not straddle a chunk boundary — derived from pair
+    ALU programs (both ends of a pair must share one ACC window)."""
     lam_c = max(1, min(lam, cfg.wgt_buff_matrices,
                        cfg.inp_buff_vectors // row_height))
     beta_c = max(1, min(beta, cfg.wgt_buff_matrices // lam_c,
@@ -123,7 +186,9 @@ def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
                          cfg.acc_buff_vectors // (row_height * beta_c),
                          cfg.out_buff_vectors // (row_height * beta_c),
                          (cfg.uop_buff_entries - 1) // beta_c))
-    plan = ChunkPlan(alpha, lam, beta, alpha_c, lam_c, beta_c, row_height)
+    plan = ChunkPlan(alpha, lam, beta, alpha_c, lam_c, beta_c, row_height,
+                     alpha_segs=_segment(alpha, alpha_c, row_groups),
+                     beta_segs=_segment(beta, beta_c, col_groups))
     _validate_plan(cfg, plan)
     return plan
 
@@ -134,11 +199,43 @@ def _validate_plan(cfg: VTAConfig, p: ChunkPlan) -> None:
     assert p.alpha_c * p.row_height * p.beta_c <= cfg.acc_buff_vectors
     assert p.alpha_c * p.row_height * p.beta_c <= cfg.out_buff_vectors
     assert p.alpha_c * p.beta_c + 1 <= cfg.uop_buff_entries
+    assert all(a <= p.alpha_c for _, a in p.alpha_segs)
+    assert all(b <= p.beta_c for _, b in p.beta_segs)
 
 
 def _ranges(total: int, chunk: int):
     for start in range(0, total, chunk):
         yield start, min(chunk, total - start)
+
+
+def _chunk_local_index(v: int, i0: int, a_c: int, j0: int, b_c: int,
+                       beta: int, row_height: int) -> Optional[int]:
+    """Global result-vector index → index into this chunk's ACC window, or
+    ``None`` when the vector lives in another chunk (block-major, §3.2)."""
+    br, rem = divmod(v, beta * row_height)
+    bc, within = divmod(rem, row_height)
+    if not (i0 <= br < i0 + a_c and j0 <= bc < j0 + b_c):
+        return None
+    return ((br - i0) * b_c + (bc - j0)) * row_height + within
+
+
+def _alu_chunk_groups(alu_ops: Sequence, beta: int, row_height: int
+                      ) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int]]]:
+    """Block-row / block-col intervals each pair op must keep in one chunk."""
+    row_groups: List[Tuple[int, int]] = []
+    col_groups: List[Tuple[int, int]] = []
+    stride = beta * row_height
+    for spec in alu_ops:
+        if isinstance(spec, AluPairOp):
+            for dst, src in spec.pairs:
+                br_d, br_s = dst // stride, src // stride
+                bc_d = (dst // row_height) % beta
+                bc_s = (src // row_height) % beta
+                if br_d != br_s:
+                    row_groups.append((min(br_d, br_s), max(br_d, br_s)))
+                if bc_d != bc_s:
+                    col_groups.append((min(bc_d, bc_s), max(bc_d, bc_s)))
+    return row_groups, col_groups
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +346,9 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     ``A`` int8 (M,K); ``B`` int8 (K,N); ``X`` int32 (M,N) accumulator preload
     or ``bias`` int32 (N,) broadcast over rows (the paper's C = A×B + X form,
     §2.3).  ``alu_ops`` is an ordered list of AluImmOp / AluPairOp /
-    AluIndexedImmOp.
+    AluIndexedImmOp; indexed/pair programs work on multi-chunk results (the
+    uops are rewritten against each chunk's local ACC window) and may exceed
+    the UOP buffer (the compiler streams them in LOAD_UOP waves).
 
     ``allocator`` — pass a shared :class:`DramAllocator` to place several
     programs (network layers, §4.2) in one DRAM region; region names are
@@ -290,53 +389,152 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
         acc_bin = binarize_blocks(x_split, cfg.acc_dtype)
 
     # ---------------- chunk plan ----------------
-    plan = plan_chunks(cfg, alpha, lam, beta, row_height)
+    n_result_vec = alpha * beta * row_height
     for spec in alu_ops:
-        if isinstance(spec, (AluPairOp, AluIndexedImmOp)) and not plan.single_chunk:
-            raise NotImplementedError(
-                "indexed/pair ALU programs require a single-chunk result")
+        if isinstance(spec, AluIndexedImmOp):
+            idxs = spec.indices
+        elif isinstance(spec, AluPairOp):
+            idxs = tuple(i for p in spec.pairs for i in p)
+        else:
+            idxs = ()
+        for v in idxs:
+            if not 0 <= v < n_result_vec:
+                raise ValueError(
+                    f"ALU index {v} outside the {n_result_vec}-vector result")
+
+    row_groups, col_groups = _alu_chunk_groups(alu_ops, beta, row_height)
+    plan = plan_chunks(cfg, alpha, lam, beta, row_height,
+                       row_groups=row_groups, col_groups=col_groups)
+    lam_segs = list(_ranges(lam, plan.lam_c))
+    chunk_list = [(i0, a_c, j0, b_c)
+                  for i0, a_c in plan.alpha_segs
+                  for j0, b_c in plan.beta_segs]
 
     # ---------------- UOPs ----------------
-    uops: List[isa.Uop] = [isa.Uop(0, 0, 0)]     # uop@0: reset / simple ALU
-    gemm_uop_start: Dict[Tuple[int, int, int], int] = {}
+    def _gemm_uops(a_c: int, b_c: int, l_c: int) -> List[isa.Uop]:
+        return [isa.Uop(acc_idx=(i * b_c + j) * row_height,
+                        inp_idx=i * l_c * row_height,
+                        wgt_idx=j)
+                for i in range(a_c) for j in range(b_c)]
 
-    def uop_block(a_c: int, b_c: int, l_c: int) -> int:
-        key = (a_c, b_c, l_c)
-        if key not in gemm_uop_start:
-            start = len(uops)
-            for i in range(a_c):
-                for j in range(b_c):
-                    uops.append(isa.Uop(acc_idx=(i * b_c + j) * row_height,
-                                        inp_idx=i * l_c * row_height,
-                                        wgt_idx=j))
-            gemm_uop_start[key] = start
-        return gemm_uop_start[key]
-
-    # Pre-generate GEMM uops for every chunk shape (so the region size is
-    # known before allocation).
-    chunk_shapes = []
-    for _, a_c in _ranges(alpha, plan.alpha_c):
-        for _, b_c in _ranges(beta, plan.beta_c):
-            for _, l_c in _ranges(lam, plan.lam_c):
-                chunk_shapes.append((a_c, b_c, l_c))
-                uop_block(a_c, b_c, l_c)
-
-    # ALU uop lists (indexed ops / pair programs)
-    alu_uop_start: List[Optional[int]] = []
-    for spec in alu_ops:
-        if isinstance(spec, AluImmOp):
-            alu_uop_start.append(None)           # reuses uop@0
-        elif isinstance(spec, AluIndexedImmOp):
-            alu_uop_start.append(len(uops))
-            for idx in spec.indices:
-                uops.append(isa.Uop(acc_idx=idx, inp_idx=idx, wgt_idx=0))
-        elif isinstance(spec, AluPairOp):
-            alu_uop_start.append(len(uops))
+    def _alu_chunk_uops(spec, i0: int, a_c: int, j0: int, b_c: int
+                        ) -> List[isa.Uop]:
+        local = lambda v: _chunk_local_index(v, i0, a_c, j0, b_c, beta,
+                                             row_height)
+        out: List[isa.Uop] = []
+        if isinstance(spec, AluIndexedImmOp):
+            for v in spec.indices:
+                lv = local(v)
+                if lv is not None:
+                    out.append(isa.Uop(acc_idx=lv, inp_idx=lv, wgt_idx=0))
+        else:
             for dst, src in spec.pairs:
-                uops.append(isa.Uop(acc_idx=dst, inp_idx=src, wgt_idx=0))
-    if len(uops) > cfg.uop_buff_entries:
-        raise NotImplementedError(
-            f"{len(uops)} uops exceed the {cfg.uop_buff_entries}-entry buffer")
+                ld, ls = local(dst), local(src)
+                if (ld is None) != (ls is None):
+                    raise AssertionError(       # plan alignment guarantees
+                        f"pair ({dst}, {src}) straddles a chunk boundary")
+                if ld is not None:
+                    out.append(isa.Uop(acc_idx=ld, inp_idx=ls, wgt_idx=0))
+        return out
+
+    chunk_alu_uops = [
+        [None if isinstance(spec, AluImmOp)
+         else _alu_chunk_uops(spec, i0, a_c, j0, b_c)
+         for spec in alu_ops]
+        for (i0, a_c, j0, b_c) in chunk_list]
+
+    capacity = cfg.uop_buff_entries
+    gemm_keys: List[Tuple[int, int, int]] = []
+    for (i0, a_c, j0, b_c) in chunk_list:
+        for _, l_c in lam_segs:
+            if (a_c, b_c, l_c) not in gemm_keys:
+                gemm_keys.append((a_c, b_c, l_c))
+    n_alu_uops = sum(len(lst) for lists in chunk_alu_uops
+                     for lst in lists if lst is not None)
+    resident_total = (1 + sum(a * b for a, b, _ in gemm_keys) + n_alu_uops)
+
+    # Use-site records.  Each GEMM use is ``(wave, uop_bgn)``; each
+    # indexed/pair ALU use is a list of ``(wave, uop_bgn, count)`` segments
+    # (one AluInsn per segment; chunks with no local entries get none).
+    # ``wave=None`` means "loaded by the preamble", i.e. resident for the
+    # whole program.
+    gemm_use: List[List[Tuple[Optional[int], int]]] = []
+    alu_use: List[List[Optional[List[Tuple[Optional[int], int, int]]]]] = []
+    waves: List[Tuple[int, int]] = []        # (dram_start, count) per wave
+    uop_dram: List[isa.Uop] = [isa.Uop(0, 0, 0)]   # uop@0: reset / simple ALU
+
+    if resident_total <= capacity:
+        # Everything fits the buffer at once: one preamble LOAD_UOP, SRAM
+        # slot = DRAM index (the original §3.3 layout).
+        gemm_start: Dict[Tuple[int, int, int], int] = {}
+        for key in gemm_keys:
+            gemm_start[key] = len(uop_dram)
+            uop_dram.extend(_gemm_uops(*key))
+        for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+            gemm_use.append([(None, gemm_start[(a_c, b_c, l_c)])
+                             for _, l_c in lam_segs])
+            uses: List[Optional[List[Tuple[Optional[int], int, int]]]] = []
+            for lst in chunk_alu_uops[ci]:
+                if lst is None:
+                    uses.append(None)
+                elif not lst:
+                    uses.append([])      # no local entries in this chunk
+                else:
+                    start = len(uop_dram)
+                    uop_dram.extend(lst)
+                    uses.append([(None, start, len(lst))])
+            alu_use.append(uses)
+        preamble_count = len(uop_dram)
+    else:
+        # Wave streaming: slot 0 keeps the reset uop; slots 1..capacity-1
+        # are reloaded per wave.  Waves are built in execution order, so a
+        # single monotone LOAD_UOP sequence covers every use.
+        preamble_count = 1
+        cap_w = capacity - 1
+        wave_maps: List[Dict[Tuple[int, int, int], Tuple[int, int]]] = []
+
+        def _begin_wave() -> None:
+            waves.append((len(uop_dram), 0))
+            wave_maps.append({})
+
+        def _place(key, lst: List[isa.Uop]) -> Tuple[int, int]:
+            if key is not None and key in wave_maps[-1]:
+                return wave_maps[-1][key]
+            start, count = waves[-1]
+            if count + len(lst) > cap_w:
+                _begin_wave()
+                start, count = waves[-1]
+            uop_dram.extend(lst)
+            waves[-1] = (start, count + len(lst))
+            entry = (len(waves) - 1, 1 + count)
+            if key is not None:
+                wave_maps[-1][key] = entry
+            return entry
+
+        _begin_wave()
+        for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+            assert a_c * b_c <= cap_w, "planner exceeded the uop buffer"
+            gemm_use.append([_place((a_c, b_c, l_c),
+                                    _gemm_uops(a_c, b_c, l_c))
+                             for _, l_c in lam_segs])
+            uses = []
+            for lst in chunk_alu_uops[ci]:
+                if lst is None:
+                    uses.append(None)
+                    continue
+                segs: List[Tuple[Optional[int], int, int]] = []
+                off = 0
+                while off < len(lst):
+                    avail = cap_w - waves[-1][1]
+                    if avail <= 0:
+                        _begin_wave()
+                        avail = cap_w
+                    n = min(avail, len(lst) - off)
+                    w, bgn = _place(None, lst[off:off + n])
+                    segs.append((w, bgn, n))
+                    off += n
+                uses.append(segs)
+            alu_use.append(uses)
 
     # ---------------- DRAM allocation (§2.2, order per §3.4) ----------------
     alloc = allocator if allocator is not None else DramAllocator(
@@ -355,10 +553,10 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     regions["out"] = alloc.alloc(pfx + "out", "out", cfg.out_elem_bytes,
                                  n_res_vec)
     regions["uop"] = alloc.alloc(pfx + "uop", "uop", cfg.uop_elem_bytes,
-                                 len(uops))
+                                 len(uop_dram))
 
-    prog = VTAProgram(config=cfg, allocator=alloc, uops=uops, name=name,
-                      regions=regions)
+    prog = VTAProgram(config=cfg, allocator=alloc, uops=uop_dram, name=name,
+                      regions=regions, chunk_plan=plan)
     prog.set_segment("inp", inp_bin)
     prog.set_segment("wgt", wgt_bin)
     if has_x:
@@ -370,97 +568,108 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     # -- program preamble: load UOPs, reset pair (§3.3 steps 1) --
     insns.append(isa.MemInsn(isa.Opcode.LOAD, isa.MemId.UOP, sram_base=0,
                              dram_base=log("uop"), y_size=1,
-                             x_size=len(uops), x_stride=len(uops)))
+                             x_size=preamble_count, x_stride=preamble_count))
     insns.append(isa.GemInsn(reset=1, uop_bgn=0, uop_end=1,
                              iter_out=1, iter_in=1))
+
+    loaded_wave: Optional[int] = None
+
+    def _ensure_wave(w: Optional[int]) -> None:
+        nonlocal loaded_wave
+        if w is None or w == loaded_wave:
+            return
+        start, count = waves[w]
+        insns.append(isa.MemInsn(
+            isa.Opcode.LOAD, isa.MemId.UOP, sram_base=1,
+            dram_base=log("uop") + start, y_size=1,
+            x_size=count, x_stride=count))
+        loaded_wave = w
 
     # -- chunk loop (§3.3 steps 2–5) --
     load_groups = 0
     stores = 0
-    for i0, a_c in _ranges(alpha, plan.alpha_c):
-        for j0, b_c in _ranges(beta, plan.beta_c):
-            first_gemm_of_chunk = True
-            if has_x:
-                # ACC preload (compute-module LOAD): chunk rows are strided
-                # runs of b_c·rh vectors out of the β·rh-wide block rows.
-                insns.append(isa.MemInsn(
-                    isa.Opcode.LOAD, isa.MemId.ACC, sram_base=0,
-                    dram_base=log("acc") + (i0 * beta + j0) * row_height,
-                    y_size=a_c, x_size=b_c * row_height,
-                    x_stride=beta * row_height))
-            for k0, l_c in _ranges(lam, plan.lam_c):
-                li = isa.MemInsn(
-                    isa.Opcode.LOAD, isa.MemId.INP, sram_base=0,
-                    dram_base=log("inp") + (i0 * lam + k0) * row_height,
-                    y_size=a_c, x_size=l_c * row_height,
-                    x_stride=lam * row_height)
-                if load_groups > 0:
-                    li.dep.pop_next = 1          # wait for compute buffer release
-                lw = isa.MemInsn(
-                    isa.Opcode.LOAD, isa.MemId.WGT, sram_base=0,
-                    dram_base=log("wgt") + k0 * beta + j0,
-                    y_size=l_c, x_size=b_c, x_stride=beta)
-                lw.dep.push_next = 1             # load group complete
-                insns.extend([li, lw])
-                load_groups += 1
-
-                if not has_x and k0 == 0:
-                    # no X preload: zero the chunk accumulator
-                    rg = isa.GemInsn(
-                        reset=1, uop_bgn=0, uop_end=1,
-                        iter_out=a_c * b_c, iter_in=row_height,
-                        acc_factor_out=row_height, acc_factor_in=1)
-                    if first_gemm_of_chunk and stores > 0:
-                        rg.dep.pop_next = 1      # wait for previous store
-                        first_gemm_of_chunk = False
-                    insns.append(rg)
-                start = uop_block(a_c, b_c, l_c)
-                g = isa.GemInsn(
-                    uop_bgn=start, uop_end=start + a_c * b_c,
-                    iter_out=l_c, iter_in=row_height,
-                    acc_factor_out=0, acc_factor_in=1,
-                    inp_factor_out=row_height, inp_factor_in=1,
-                    wgt_factor_out=b_c, wgt_factor_in=0)
-                g.dep.pop_prev = 1               # consume load group
-                g.dep.push_prev = 1              # release INP/WGT buffers
-                if first_gemm_of_chunk and stores > 0:
-                    g.dep.pop_next = 1           # wait for previous store
-                first_gemm_of_chunk = False
-                insns.append(g)
-
-            n_vec_chunk = a_c * b_c * row_height
-            for spec, ustart in zip(alu_ops, alu_uop_start):
-                if isinstance(spec, AluImmOp):
-                    insns.append(isa.AluInsn(
-                        alu_opcode=spec.op, uop_bgn=0, uop_end=1,
-                        iter_out=a_c * b_c, iter_in=row_height,
-                        dst_factor_out=row_height, dst_factor_in=1,
-                        src_factor_out=row_height, src_factor_in=1,
-                        use_imm=1, imm=spec.imm))
-                elif isinstance(spec, AluIndexedImmOp):
-                    insns.append(isa.AluInsn(
-                        alu_opcode=spec.op, uop_bgn=ustart,
-                        uop_end=ustart + len(spec.indices),
-                        iter_out=1, iter_in=1, use_imm=1, imm=spec.imm))
-                elif isinstance(spec, AluPairOp):
-                    insns.append(isa.AluInsn(
-                        alu_opcode=spec.op, uop_bgn=ustart,
-                        uop_end=ustart + len(spec.pairs),
-                        iter_out=1, iter_in=1, use_imm=0))
-            insns[-1].dep.push_next = 1          # result ready for store
-
-            st = isa.MemInsn(
-                isa.Opcode.STORE, isa.MemId.OUT, sram_base=0,
-                dram_base=log("out") + (i0 * beta + j0) * row_height,
+    for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+        first_gemm_of_chunk = True
+        if has_x:
+            # ACC preload (compute-module LOAD): chunk rows are strided
+            # runs of b_c·rh vectors out of the β·rh-wide block rows.
+            insns.append(isa.MemInsn(
+                isa.Opcode.LOAD, isa.MemId.ACC, sram_base=0,
+                dram_base=log("acc") + (i0 * beta + j0) * row_height,
                 y_size=a_c, x_size=b_c * row_height,
-                x_stride=beta * row_height)
-            st.dep.pop_prev = 1
-            st.dep.push_prev = 1
-            insns.append(st)
-            stores += 1
+                x_stride=beta * row_height))
+        for ki, (k0, l_c) in enumerate(lam_segs):
+            li = isa.MemInsn(
+                isa.Opcode.LOAD, isa.MemId.INP, sram_base=0,
+                dram_base=log("inp") + (i0 * lam + k0) * row_height,
+                y_size=a_c, x_size=l_c * row_height,
+                x_stride=lam * row_height)
+            if load_groups > 0:
+                li.dep.pop_next = 1          # wait for compute buffer release
+            lw = isa.MemInsn(
+                isa.Opcode.LOAD, isa.MemId.WGT, sram_base=0,
+                dram_base=log("wgt") + k0 * beta + j0,
+                y_size=l_c, x_size=b_c, x_stride=beta)
+            lw.dep.push_next = 1             # load group complete
+            insns.extend([li, lw])
+            load_groups += 1
+
+            if not has_x and k0 == 0:
+                # no X preload: zero the chunk accumulator
+                rg = isa.GemInsn(
+                    reset=1, uop_bgn=0, uop_end=1,
+                    iter_out=a_c * b_c, iter_in=row_height,
+                    acc_factor_out=row_height, acc_factor_in=1)
+                if first_gemm_of_chunk and stores > 0:
+                    rg.dep.pop_next = 1      # wait for previous store
+                    first_gemm_of_chunk = False
+                insns.append(rg)
+            wave, start = gemm_use[ci][ki]
+            _ensure_wave(wave)
+            g = isa.GemInsn(
+                uop_bgn=start, uop_end=start + a_c * b_c,
+                iter_out=l_c, iter_in=row_height,
+                acc_factor_out=0, acc_factor_in=1,
+                inp_factor_out=row_height, inp_factor_in=1,
+                wgt_factor_out=b_c, wgt_factor_in=0)
+            g.dep.pop_prev = 1               # consume load group
+            g.dep.push_prev = 1              # release INP/WGT buffers
+            if first_gemm_of_chunk and stores > 0:
+                g.dep.pop_next = 1           # wait for previous store
+            first_gemm_of_chunk = False
+            insns.append(g)
+
+        for spec, use in zip(alu_ops, alu_use[ci]):
+            if isinstance(spec, AluImmOp):
+                insns.append(isa.AluInsn(
+                    alu_opcode=spec.op, uop_bgn=0, uop_end=1,
+                    iter_out=a_c * b_c, iter_in=row_height,
+                    dst_factor_out=row_height, dst_factor_in=1,
+                    src_factor_out=row_height, src_factor_in=1,
+                    use_imm=1, imm=spec.imm))
+                continue
+            use_imm = 1 if isinstance(spec, AluIndexedImmOp) else 0
+            imm = spec.imm if use_imm else 0
+            for (wave, start, count) in use:
+                _ensure_wave(wave)
+                insns.append(isa.AluInsn(
+                    alu_opcode=spec.op, uop_bgn=start,
+                    uop_end=start + count,
+                    iter_out=1, iter_in=1, use_imm=use_imm, imm=imm))
+        insns[-1].dep.push_next = 1          # result ready for store
+
+        st = isa.MemInsn(
+            isa.Opcode.STORE, isa.MemId.OUT, sram_base=0,
+            dram_base=log("out") + (i0 * beta + j0) * row_height,
+            y_size=a_c, x_size=b_c * row_height,
+            x_stride=beta * row_height)
+        st.dep.pop_prev = 1
+        st.dep.push_prev = 1
+        insns.append(st)
+        stores += 1
 
     fin = isa.FinishInsn()
-    fin.dep.pop_next = 1                         # last store completed
+    fin.dep.pop_next = 1                     # last store completed
     insns.append(fin)
 
     prog.instructions = insns

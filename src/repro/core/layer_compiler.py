@@ -1,8 +1,12 @@
 """One CNN layer → one VTA program (paper §4.2, Fig. 11).
 
-A *layer* (paper §4.1) = one dense linear operation (convolution or fully
-connected) + subsequent non-linear operations (ReLU on TensorAlu; average
-pooling as an ALU ADD/SHR program; static power-of-2 requantisation).
+A *layer* (paper §4.1) = one dense linear operation (convolution — valid or
+zero-padded "same" — or fully connected) + subsequent non-linear operations
+(ReLU on TensorAlu; average pooling as an ALU ADD/SHR program; max pooling
+as an ALU MAX pair program; static power-of-2 requantisation).  Layers
+whose matrices exceed the SRAM compile to multi-chunk programs — the GEMM
+compiler re-indexes the pool/requant uops against each chunk's local ACC
+window (DESIGN.md §3), so nothing here is limited to single-chunk results.
 
 The lowering is the extended pipeline of Fig. 11:
 
@@ -26,12 +30,13 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .conv_lowering import (ConvGeometry, PoolPlan, avgpool2x2_plan,
-                            flatten_tensor, im2row, ker2col, mat2tensor)
+                            flatten_tensor, im2row, ker2col, mat2tensor,
+                            maxpool2x2_plan)
 from .dram import DramAllocator
 from .gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
                             compile_matmul)
 from .hwconfig import VTAConfig, vta_default
-from .layout import pad_to_multiple, should_pad_height
+from .layout import pad_to_multiple, should_pad_height, truncate_int8
 from .program import VTAProgram
 from . import isa
 
@@ -50,8 +55,9 @@ class LayerSpec:
     weights: np.ndarray
     bias: Optional[np.ndarray] = None     # int32 (F,)
     stride: int = 1
+    padding: int = 0               # symmetric zero-padding (conv only)
     relu: bool = False
-    pool: Optional[str] = None     # None | "avg2x2"
+    pool: Optional[str] = None     # None | "avg2x2" | "max2x2"
     requant_shift: Optional[int] = None   # None = choose statically
 
     def out_features(self) -> int:
@@ -78,12 +84,40 @@ class CompiledLayer:
     def gemm_loops(self) -> int:
         return self.program.gemm_loops()
 
+    @property
+    def n_chunks(self) -> int:
+        """SRAM chunks the layer's GEMM was tiled into (§3.3 repetition)."""
+        plan = self.program.chunk_plan
+        return plan.n_chunks if plan is not None else 1
+
 
 def _vec_index(row: int, col_block: int, beta: int, row_height: int) -> int:
     """ACC-vector index of matrix row ``row`` in block column ``col_block``
     (block-major SRAM layout, §3.2)."""
     block_row, within = divmod(row, row_height)
     return (block_row * beta + col_block) * row_height + within
+
+
+def pool_plan_for(spec: LayerSpec,
+                  geo: Optional[ConvGeometry]) -> Optional[PoolPlan]:
+    """The pooling plan a LayerSpec asks for (None = no pooling).  The
+    single place pool kinds are interpreted — unknown kinds raise here for
+    the compiler and the calibration path alike."""
+    if spec.pool is None:
+        return None
+    if geo is None:
+        raise ValueError("pooling requires a conv layer")
+    if spec.pool == "avg2x2":
+        return avgpool2x2_plan(geo.out_h, geo.out_w)
+    if spec.pool == "max2x2":
+        return maxpool2x2_plan(geo.out_h, geo.out_w)
+    raise ValueError(f"unsupported pool {spec.pool!r}")
+
+
+def pool_divisor(pool_plan: Optional[PoolPlan]) -> int:
+    """log2 of the pooling division folded into the requant shift
+    (avg pool sums 4 members → ÷4; max pool divides by nothing)."""
+    return 2 if pool_plan is not None and pool_plan.mode == "avg" else 0
 
 
 def choose_requant_shift(acc: np.ndarray, *, already_shifted: int = 0) -> int:
@@ -105,8 +139,9 @@ def layer_matrices(spec: LayerSpec, inp: np.ndarray
         if inp.shape[1] != c:
             raise ValueError(f"layer {spec.name!r}: channel mismatch "
                              f"{inp.shape[1]} != {c}")
-        geo = ConvGeometry(c, inp.shape[2], inp.shape[3], kh, kw, spec.stride)
-        A = im2row(inp, kh, kw, spec.stride)
+        geo = ConvGeometry(c, inp.shape[2], inp.shape[3], kh, kw, spec.stride,
+                           spec.padding)
+        A = im2row(inp, kh, kw, spec.stride, spec.padding)
         B = ker2col(spec.weights)
         return A, B, geo
     if spec.kind == "fc":
@@ -134,10 +169,12 @@ def reference_layer_acc(A: np.ndarray, B: np.ndarray,
         pooled = np.zeros((len(pool_plan.keep_rows), acc.shape[1]),
                           dtype=np.int64)
         for r, base in enumerate(pool_plan.keep_rows):
-            i, j = divmod(r, pool_plan.out_w)
             in_w = pool_plan.out_w * 2
-            rows = (base, base + 1, base + in_w, base + in_w + 1)
-            pooled[r] = acc[list(rows)].sum(axis=0)
+            rows = [base, base + 1, base + in_w, base + in_w + 1]
+            if pool_plan.mode == "max":
+                pooled[r] = acc[rows].max(axis=0)
+            else:
+                pooled[r] = acc[rows].sum(axis=0)
         return pooled
     return acc
 
@@ -153,17 +190,11 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
     N = B.shape[1]
 
     # ---- pooling plan (indices in matrix-row space) ----
-    pool_plan: Optional[PoolPlan] = None
-    if spec.pool == "avg2x2":
-        if geo is None:
-            raise ValueError("pooling requires a conv layer")
-        pool_plan = avgpool2x2_plan(geo.out_h, geo.out_w)
-    elif spec.pool is not None:
-        raise ValueError(f"unsupported pool {spec.pool!r}")
+    pool_plan = pool_plan_for(spec, geo)
 
     # ---- static requant shift (+ overflow check) ----
     acc_pre_shift = reference_layer_acc(A, B, spec.bias, spec.relu, pool_plan)
-    pool_div = 2 if pool_plan is not None else 0
+    pool_div = pool_divisor(pool_plan)
     shift = (spec.requant_shift if spec.requant_shift is not None
              else choose_requant_shift(acc_pre_shift, already_shifted=pool_div))
     final = acc_pre_shift >> (pool_div + shift)
@@ -185,7 +216,8 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
             for j in range(beta):
                 pairs.append((_vec_index(dst, j, beta, row_height),
                               _vec_index(src, j, beta, row_height)))
-        alu_ops.append(AluPairOp(isa.AluOp.ADD, tuple(pairs)))
+        pool_op = isa.AluOp.MAX if pool_plan.mode == "max" else isa.AluOp.ADD
+        alu_ops.append(AluPairOp(pool_op, tuple(pairs)))
         total_shift = pool_div + shift
         if total_shift > 0:
             idx = []
@@ -201,7 +233,7 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
                           name=spec.name, allocator=allocator)
 
     # ---- reference post-reshape output matrix (int8) ----
-    ref = (final & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+    ref = truncate_int8(final)
 
     keep = pool_plan.keep_rows if pool_plan is not None else None
     out_h = out_w = None

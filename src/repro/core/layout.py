@@ -18,6 +18,13 @@ def pad_to_multiple(n: int, multiple: int) -> int:
     return ((n + multiple - 1) // multiple) * multiple
 
 
+def truncate_int8(x: np.ndarray) -> np.ndarray:
+    """The ACC→OUT truncation (§2.1): keep the low 8 bits, reinterpreted
+    as int8.  The single definition of the idiom — the simulators' commit,
+    the layer references and the model references all route through it."""
+    return (x & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+
+
 def matrix_padding(mat: np.ndarray, block_size: int, *,
                    pad_height: bool = True) -> np.ndarray:
     """Zero-pad ``mat`` on the right/bottom to ``block_size`` multiples.

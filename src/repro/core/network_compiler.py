@@ -55,6 +55,12 @@ class NetworkProgram:
     def gemm_loops_per_layer(self) -> List[int]:
         return [l.program.gemm_loops() for l in self.layers]
 
+    def chunks_per_layer(self) -> List[int]:
+        """SRAM chunks per layer (§3.3 "steps 2 to 5 must be repeated") —
+        > 1 anywhere means the network genuinely exceeds a single SRAM
+        residency and exercises the multi-chunk compiler (DESIGN.md §3)."""
+        return [l.n_chunks for l in self.layers]
+
     def cycle_report(self) -> CycleReport:
         return analyze_programs([l.program for l in self.layers])
 
@@ -113,6 +119,52 @@ class NetworkProgram:
                                   self.layers[-1].out_w)
         np.testing.assert_array_equal(out, expected)
         return out, reports
+
+
+def calibrate_network_shifts(specs: Sequence[LayerSpec],
+                             images: Sequence[np.ndarray],
+                             margin: int = 1) -> List[int]:
+    """Static per-layer requant shifts from a calibration set (§4.2
+    discipline: shifts are fixed at compile time; the margin bit guards
+    unseen inputs against int8 wrap-around).  Model-agnostic: works for
+    any conv/fc chain with valid or same padding and avg/max pooling.
+
+    Layer k's input depends on shifts < k, so calibration is sequential.
+    """
+    from .conv_lowering import mat2tensor
+    from .layer_compiler import (choose_requant_shift, layer_matrices,
+                                 pool_divisor, pool_plan_for,
+                                 reference_layer_acc)
+
+    shifts: List[int] = []
+    currents = [np.asarray(img, np.int8) for img in images]
+    for spec in specs:
+        pool_div = 0
+        accs = []
+        geos = []
+        for cur in currents:
+            A, B, geo = layer_matrices(spec, cur)
+            plan = pool_plan_for(spec, geo)
+            pool_div = pool_divisor(plan)
+            accs.append(reference_layer_acc(A, B, spec.bias, spec.relu, plan))
+            geos.append((geo, plan))
+        m = max(int(np.abs(a).max(initial=0)) for a in accs)
+        shift = choose_requant_shift(np.asarray([m]),
+                                     already_shifted=pool_div) + margin
+        shifts.append(shift)
+        # advance every calibration image through this layer
+        nxt = []
+        for acc, (geo, plan) in zip(accs, geos):
+            out = acc >> (pool_div + shift)
+            out = np.clip(out, -128, 127).astype(np.int8)   # margin holds
+            if spec.kind == "conv":
+                oh = plan.out_h if plan else geo.out_h
+                ow = plan.out_w if plan else geo.out_w
+                nxt.append(mat2tensor(out, oh, ow))
+            else:
+                nxt.append(out)
+        currents = nxt
+    return shifts
 
 
 def compile_network(specs: Sequence[LayerSpec], input_tensor: np.ndarray, *,

@@ -49,6 +49,10 @@ class VTAProgram:
     output_meta: Optional[OutputMeta] = None
     expected_out: Optional[np.ndarray] = None
     name: str = "program"
+    # The compiler's SRAM tiling (a gemm_compiler.ChunkPlan) — observability
+    # for the §3.3 chunk loop (n_chunks, segment geometry); None for
+    # hand-written instruction streams.
+    chunk_plan: Optional[object] = None
 
     # ------------------------------------------------------------------
     def region(self, name: str) -> Region:

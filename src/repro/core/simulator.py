@@ -10,7 +10,9 @@ fast path lives in :mod:`repro.core.fast_simulator`; select it with
 Semantics implemented:
 
 * LOAD/STORE — 2-D strided DRAM<->SRAM moves with x/y zero-padding
-  (``MemInsn``), per buffer (UOP/WGT/INP/ACC/OUT);
+  (``MemInsn``), per buffer (UOP/WGT/INP/ACC/OUT); mid-stream LOAD UOP
+  re-fills (the §3.3 uop waves of multi-chunk programs, DESIGN.md §3) are
+  ordinary compute-module loads;
 * GEMM — Algorithm 1 verbatim, including ``reset``; int8×int8 products
   accumulated into int32 with wrap-around;
 * ALU — MIN/MAX/ADD/SHR over ACC vectors, immediate or vector-pair form;
@@ -32,6 +34,7 @@ import numpy as np
 
 from . import isa
 from .hwconfig import VTAConfig
+from .layout import truncate_int8
 from .program import VTAProgram
 
 
@@ -278,7 +281,7 @@ class FunctionalSimulator:
     # ------------------------------------------------------------------
     def _commit_out(self) -> None:
         """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
-        self.out_buf[:] = (self.acc_buf & 0xFF).astype(np.uint8).view(np.int8)
+        self.out_buf[:] = truncate_int8(self.acc_buf)
 
     def run(self, instructions) -> SimReport:
         for insn in instructions:

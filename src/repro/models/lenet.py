@@ -84,8 +84,8 @@ def lenet5_specs(weights: LeNetWeights,
 # ---------------------------------------------------------------------------
 
 def _requant(acc: np.ndarray, pool_div: int, shift: int) -> np.ndarray:
-    out = acc >> (pool_div + shift)
-    return (out & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+    from repro.core.layout import truncate_int8
+    return truncate_int8(acc >> (pool_div + shift))
 
 
 def _avgpool_sum(t: np.ndarray) -> np.ndarray:
@@ -172,43 +172,8 @@ def synthetic_digit(seed: int = 0) -> np.ndarray:
 def calibrate_shifts(weights: LeNetWeights, images: Sequence[np.ndarray],
                      margin: int = 1) -> List[int]:
     """Static per-layer requant shifts from a calibration set (§4.2
-    discipline: shifts are fixed at compile time; the margin bit guards
-    unseen inputs against int8 wrap-around).
-
-    Layer k's input depends on shifts < k, so calibration is sequential.
-    """
-    from repro.core.layer_compiler import (choose_requant_shift,
-                                           layer_matrices,
-                                           reference_layer_acc)
-    from repro.core.conv_lowering import avgpool2x2_plan, mat2tensor
-
-    specs = lenet5_specs(weights)
-    shifts: List[int] = []
-    currents = [np.asarray(img, np.int8) for img in images]
-    for spec in specs:
-        pool_div = 2 if spec.pool == "avg2x2" else 0
-        accs = []
-        geos = []
-        for cur in currents:
-            A, B, geo = layer_matrices(spec, cur)
-            plan = (avgpool2x2_plan(geo.out_h, geo.out_w)
-                    if spec.pool == "avg2x2" else None)
-            accs.append(reference_layer_acc(A, B, spec.bias, spec.relu, plan))
-            geos.append((geo, plan))
-        m = max(int(np.abs(a).max(initial=0)) for a in accs)
-        shift = choose_requant_shift(np.asarray([m]),
-                                     already_shifted=pool_div) + margin
-        shifts.append(shift)
-        # advance every calibration image through this layer
-        nxt = []
-        for acc, (geo, plan) in zip(accs, geos):
-            out = acc >> (pool_div + shift)
-            out = np.clip(out, -128, 127).astype(np.int8)   # margin holds
-            if spec.kind == "conv":
-                oh = plan.out_h if plan else geo.out_h
-                ow = plan.out_w if plan else geo.out_w
-                nxt.append(mat2tensor(out, oh, ow))
-            else:
-                nxt.append(out)
-        currents = nxt
-    return shifts
+    discipline; see :func:`repro.core.network_compiler.
+    calibrate_network_shifts` for the model-agnostic implementation)."""
+    from repro.core.network_compiler import calibrate_network_shifts
+    return calibrate_network_shifts(lenet5_specs(weights), images,
+                                    margin=margin)

@@ -5,8 +5,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
-from repro.core.conv_lowering import (avgpool2x2_plan, conv2d_reference,
-                                      im2row, ker2col, mat2tensor,
+from repro.core.conv_lowering import (ConvGeometry, avgpool2x2_plan,
+                                      conv2d_reference, im2row, ker2col,
+                                      mat2tensor, maxpool2x2_plan,
                                       tensor2mat, flatten_tensor)
 
 
@@ -56,6 +57,43 @@ def test_mat2tensor_tensor2mat_inverse(f, h, w, seed):
 def test_flatten_is_nchw_order():
     t = np.arange(2 * 3 * 4, dtype=np.int8).reshape(1, 2, 3, 4)
     np.testing.assert_array_equal(flatten_tensor(t)[0], np.arange(24))
+
+
+@given(c=st.integers(1, 4), h=st.integers(3, 10), w=st.integers(3, 10),
+       f=st.integers(1, 5), k=st.integers(1, 3), stride=st.integers(1, 2),
+       pad=st.integers(0, 2), seed=st.integers(0, 2**16))
+@settings(max_examples=60, deadline=None)
+def test_def3_property_with_padding(c, h, w, f, k, stride, pad, seed):
+    """Def. 3 extended to zero-padded ("same") convolution: the padding is
+    materialised host-side, so Def. 3 must keep holding verbatim."""
+    rng = np.random.default_rng(seed)
+    T_A = rng.integers(-64, 64, (1, c, h, w), dtype=np.int64).astype(np.int8)
+    T_B = rng.integers(-64, 64, (f, c, k, k), dtype=np.int64).astype(np.int8)
+    A = im2row(T_A, k, k, stride, pad)
+    B = ker2col(T_B)
+    C = A.astype(np.int64) @ B.astype(np.int64)
+    geo = ConvGeometry(c, h, w, k, k, stride, pad)
+    T_C = mat2tensor(C, geo.out_h, geo.out_w)
+    np.testing.assert_array_equal(T_C, conv2d_reference(T_A, T_B, stride, pad))
+
+
+def test_same_padding_preserves_spatial_dims():
+    """pad=(k-1)//2 with stride 1 keeps H×W (the "same" convolutions the
+    YOLO-class workloads need, DESIGN.md §3)."""
+    for k in (1, 3, 5, 7):
+        geo = ConvGeometry(3, 32, 32, k, k, 1, (k - 1) // 2)
+        assert (geo.out_h, geo.out_w) == (32, 32)
+    t = np.ones((1, 3, 32, 32), dtype=np.int8)
+    assert im2row(t, 5, 5, 1, 2).shape == (1024, 75)
+
+
+def test_maxpool_plan_mirrors_avgpool_geometry():
+    avg = avgpool2x2_plan(4, 4)
+    mx = maxpool2x2_plan(4, 4)
+    assert mx.keep_rows == avg.keep_rows
+    assert mx.add_pairs == avg.add_pairs      # same windows, MAX instead of ADD
+    assert (mx.mode, avg.mode) == ("max", "avg")
+    assert mx.out_h == mx.out_w == 2
 
 
 def test_avgpool_plan_indices():

@@ -1,0 +1,78 @@
+"""Docs-consistency floor: every ``*.md`` document cited from ``src/``
+must exist at the repo root.
+
+A dozen module docstrings cite DESIGN.md / EXPERIMENTS.md sections (the
+hardware/software co-design discipline of the VTA blueprint paper); this
+test is what keeps those cross-references from dangling again.  CI runs it
+as a dedicated docs-consistency step.
+
+Hypothesis-free: part of the tier-1 floor.
+"""
+
+import pathlib
+import re
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
+# §-section citations also live in tests/, benchmarks/ and examples/.
+SCAN_DIRS = (SRC, REPO_ROOT / "tests", REPO_ROOT / "benchmarks",
+             REPO_ROOT / "examples")
+
+# Upper-case markdown citations like DESIGN.md, EXPERIMENTS.md, ROADMAP.md.
+_MD_REF = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
+# Section citations like "DESIGN.md §3" / "EXPERIMENTS.md §Perf".
+_SECTION_REF = re.compile(r"([A-Z][A-Z0-9_]*\.md)\s*§([A-Za-z0-9-]+)")
+
+_THIS_FILE = pathlib.Path(__file__).resolve()
+
+
+def _scan_files():
+    for base in SCAN_DIRS:
+        for py in sorted(base.rglob("*.py")):
+            if py.resolve() == _THIS_FILE:
+                continue
+            yield py, py.read_text(encoding="utf-8")
+
+
+def cited_docs():
+    refs = {}          # doc name -> first citing file
+    for py, text in _scan_files():
+        for m in _MD_REF.finditer(text):
+            refs.setdefault(m.group(1), py.relative_to(REPO_ROOT))
+    return refs
+
+
+def cited_sections():
+    refs = {}          # (doc, section) -> first citing file
+    for py, text in _scan_files():
+        for m in _SECTION_REF.finditer(text):
+            refs.setdefault((m.group(1), m.group(2)),
+                            py.relative_to(REPO_ROOT))
+    return refs
+
+
+def test_every_cited_markdown_doc_exists():
+    refs = cited_docs()
+    assert refs, "expected src/ to cite at least one markdown doc"
+    missing = {doc: str(src) for doc, src in refs.items()
+               if not (REPO_ROOT / doc).exists()}
+    assert not missing, (
+        f"docstrings cite markdown files that do not exist: {missing}")
+
+
+def test_every_cited_section_resolves():
+    """Every ``<DOC>.md §<section>`` citation in the codebase must appear
+    in that document — scanned, not hardcoded, so a future citation of a
+    section that does not exist fails here instead of dangling."""
+    refs = cited_sections()
+    assert refs, "expected at least one '<DOC>.md §<section>' citation"
+    doc_text = {}
+    missing = {}
+    for (doc, section), src in refs.items():
+        if doc not in doc_text:
+            path = REPO_ROOT / doc
+            doc_text[doc] = (path.read_text(encoding="utf-8")
+                             if path.exists() else "")
+        if f"§{section}" not in doc_text[doc]:
+            missing[f"{doc} §{section}"] = str(src)
+    assert not missing, f"cited sections not found in their docs: {missing}"

@@ -163,6 +163,160 @@ def test_alu_pair_read_after_write_falls_back():
 
 
 # ---------------------------------------------------------------------------
+# Multi-chunk indexed/pair ALU programs + uop-wave streaming (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+_SMALL_CFG = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                       acc_buff_vectors=64, out_buff_vectors=64,
+                       uop_buff_entries=32)
+
+
+def _count_uop_loads(prog):
+    return sum(1 for i in prog.instructions
+               if isinstance(i, isa.MemInsn)
+               and i.memory_type == isa.MemId.UOP)
+
+
+def test_fuzz_multi_chunk_indexed_and_pair_programs():
+    """Indexed-imm and pair ALU programs on multi-chunk results — the
+    first NotImplementedError ceiling of PR 1.  Pairs are confined to one
+    block row/col (always chunk-safe); indices scatter everywhere."""
+    rng = np.random.default_rng(2027)
+    for case in range(6):
+        m = int(rng.integers(40, 100))
+        k = int(rng.integers(20, 80))
+        n = int(rng.integers(17, 60))
+        A = rng.integers(-64, 64, (m, k)).astype(np.int8)
+        B = rng.integers(-64, 64, (k, n)).astype(np.int8)
+        rh = 16
+        alpha = -(-m // rh)
+        beta = -(-n // rh)
+        n_vec = alpha * beta * rh
+        idx = tuple(int(v) for v in
+                    rng.choice(n_vec, size=min(n_vec, 40), replace=False))
+        pairs = []
+        for _ in range(10):
+            br = int(rng.integers(0, alpha))
+            bc = int(rng.integers(0, beta))
+            w0, w1 = rng.choice(rh, size=2, replace=False)
+            base = (br * beta + bc) * rh
+            pairs.append((base + int(w0), base + int(w1)))
+        prog = compile_matmul(
+            A, B, cfg=_SMALL_CFG,
+            alu_ops=[AluImmOp.relu(),
+                     AluPairOp(isa.AluOp.ADD, tuple(pairs)),
+                     AluIndexedImmOp(isa.AluOp.SHR, 2, idx)])
+        assert prog.chunk_plan.n_chunks > 1
+        assert_backends_identical(prog)
+        verify_program(prog, backend="fast")
+
+
+def test_multi_chunk_cross_row_pairs_align_chunk_boundaries():
+    """Pairs that span block rows force the planner to cut only at
+    group-aligned boundaries; both ends stay in one ACC window."""
+    rng = np.random.default_rng(5)
+    A = rng.integers(-64, 64, (80, 48)).astype(np.int8)
+    B = rng.integers(-64, 64, (48, 16)).astype(np.int8)
+    cfg = VTAConfig(inp_buff_vectors=256, wgt_buff_matrices=8,
+                    acc_buff_vectors=32, out_buff_vectors=32,
+                    uop_buff_entries=64)
+    rh = 16
+    pairs = ((0 * rh + 15, 1 * rh + 0), (2 * rh + 3, 3 * rh + 3))
+    prog = compile_matmul(A, B, cfg=cfg,
+                          alu_ops=[AluPairOp(isa.AluOp.MAX, pairs)])
+    assert prog.chunk_plan.n_chunks > 1
+    # every chunk boundary falls between the (0,1) and (2,3) groups
+    starts = [s for s, _ in prog.chunk_plan.alpha_segs]
+    assert all(s not in (1, 3) for s in starts)
+    assert_backends_identical(prog)
+    verify_program(prog, backend="fast")
+
+
+def test_unsplittable_pair_group_is_a_clear_error():
+    """A pair group wider than any admissible chunk raises ValueError
+    (not a silent wrong answer, not NotImplementedError)."""
+    rng = np.random.default_rng(6)
+    A = rng.integers(-64, 64, (80, 48)).astype(np.int8)
+    B = rng.integers(-64, 64, (48, 16)).astype(np.int8)
+    cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                    acc_buff_vectors=16, out_buff_vectors=16,
+                    uop_buff_entries=32)   # alpha_c == 1 block row
+    with pytest.raises(ValueError, match="spans more than one SRAM chunk"):
+        compile_matmul(A, B, cfg=cfg,
+                       alu_ops=[AluPairOp(isa.AluOp.ADD, ((15, 16),))])
+
+
+def test_fuzz_uop_wave_streaming():
+    """Programs whose uop lists exceed the buffer stream LOAD_UOP waves —
+    the second NotImplementedError ceiling of PR 1.  Fast == oracle on
+    every observable, including the extra LOAD UOP traffic."""
+    rng = np.random.default_rng(2028)
+    for uop_entries in (8, 12, 20):
+        cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                        acc_buff_vectors=64, out_buff_vectors=64,
+                        uop_buff_entries=uop_entries)
+        m = int(rng.integers(40, 90))
+        k = int(rng.integers(20, 60))
+        n = int(rng.integers(10, 40))
+        A = rng.integers(-64, 64, (m, k)).astype(np.int8)
+        B = rng.integers(-64, 64, (k, n)).astype(np.int8)
+        rh = 16
+        n_vec = -(-m // rh) * -(-n // rh) * rh
+        idx = tuple(int(v) for v in rng.choice(n_vec, size=n_vec // 2,
+                                               replace=False))
+        prog = compile_matmul(A, B, cfg=cfg,
+                              alu_ops=[AluImmOp.relu(),
+                                       AluIndexedImmOp(isa.AluOp.ADD, 3, idx)])
+        assert _count_uop_loads(prog) > 1, "expected multi-wave streaming"
+        assert len(prog.uops) > uop_entries
+        assert_backends_identical(prog)
+        verify_program(prog, backend="fast")
+
+
+def test_uop_wave_alu_list_split_across_waves():
+    """One indexed ALU op bigger than the whole buffer splits into several
+    AluInsns with interleaved LOAD_UOPs; total loop count is preserved."""
+    rng = np.random.default_rng(9)
+    A = rng.integers(-16, 16, (32, 16)).astype(np.int8)
+    B = rng.integers(-16, 16, (16, 16)).astype(np.int8)
+    cfg = VTAConfig(inp_buff_vectors=2048, wgt_buff_matrices=1024,
+                    acc_buff_vectors=2048, out_buff_vectors=2048,
+                    uop_buff_entries=8)
+    idx = tuple(range(32))
+    prog = compile_matmul(A, B, cfg=cfg,
+                          alu_ops=[AluIndexedImmOp(isa.AluOp.SHR, 1, idx)])
+    alus = [i for i in prog.instructions if isinstance(i, isa.AluInsn)]
+    assert len(alus) > 1
+    assert sum(a.loop_count for a in alus) == len(idx)
+    assert_backends_identical(prog)
+    verify_program(prog, backend="fast")
+
+
+def test_padded_conv_max_pool_layer_multi_chunk():
+    """Same-padded conv + 2×2 max pool compiled multi-chunk: the MAX pair
+    program is re-indexed per chunk and bit-exact on both backends."""
+    from repro.core.layer_compiler import LayerSpec, compile_layer, verify_layer
+    rng = np.random.default_rng(44)
+    cfg = VTAConfig(inp_buff_vectors=256, wgt_buff_matrices=64,
+                    acc_buff_vectors=128, out_buff_vectors=128,
+                    uop_buff_entries=256)
+    for pool in ("max2x2", "avg2x2"):
+        spec = LayerSpec(
+            name=f"c_{pool}", kind="conv",
+            weights=rng.integers(-8, 8, (8, 3, 3, 3)).astype(np.int8),
+            bias=rng.integers(-100, 100, (8,)).astype(np.int32),
+            padding=1, relu=True, pool=pool)
+        inp = rng.integers(-32, 64, (1, 3, 16, 16)).astype(np.int8)
+        layer = compile_layer(spec, inp, cfg=cfg)
+        assert layer.n_chunks > 1
+        assert layer.out_h == layer.out_w == 8   # same padding halved once
+        rep_o = verify_layer(layer)
+        rep_f = verify_layer(layer, backend="fast")
+        assert rep_o.gemm_loops == rep_f.gemm_loops
+        assert rep_o.alu_loops == rep_f.alu_loops
+
+
+# ---------------------------------------------------------------------------
 # LOAD padding, hazards, plan caching, backend plumbing
 # ---------------------------------------------------------------------------
 

@@ -102,6 +102,79 @@ def test_chunked_equals_unchunked(seed):
     np.testing.assert_array_equal(out_small, out_big)
 
 
+@given(m=st.integers(33, 90), k=st.integers(17, 70), n=st.integers(17, 48),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_multi_chunk_indexed_and_pair_alu_property(m, k, n, seed):
+    """The PR-1 single-chunk ceiling is gone: indexed-imm and pair ALU
+    programs compile on multi-chunk results (uops re-indexed per chunk)
+    and run bit-exact against the numpy oracle."""
+    cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                    acc_buff_vectors=64, out_buff_vectors=64,
+                    uop_buff_entries=64)
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-64, 64, (m, k)).astype(np.int8)
+    B = rng.integers(-64, 64, (k, n)).astype(np.int8)
+    rh = 16
+    alpha, beta = -(-m // rh), -(-n // rh)
+    n_vec = alpha * beta * rh
+    idx = tuple(int(v) for v in
+                rng.choice(n_vec, size=min(n_vec, 32), replace=False))
+    pairs = []
+    for _ in range(8):
+        base = (int(rng.integers(0, alpha)) * beta
+                + int(rng.integers(0, beta))) * rh
+        w0, w1 = rng.choice(rh, size=2, replace=False)
+        pairs.append((base + int(w0), base + int(w1)))
+    prog = compile_matmul(A, B, cfg=cfg,
+                          alu_ops=[AluImmOp.relu(),
+                                   AluPairOp(isa.AluOp.ADD, tuple(pairs)),
+                                   AluIndexedImmOp(isa.AluOp.SHR, 2, idx)])
+    assert prog.chunk_plan.n_chunks > 1
+    verify_program(prog)
+
+
+@given(m=st.integers(33, 80), k=st.integers(17, 60), n=st.integers(10, 40),
+       uop_entries=st.integers(8, 24), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_uop_buffer_overflow_streams_waves_property(m, k, n, uop_entries,
+                                                    seed):
+    """Programs needing more uops than the buffer stream LOAD_UOP waves
+    instead of raising; results stay bit-exact vs the oracle."""
+    cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                    acc_buff_vectors=64, out_buff_vectors=64,
+                    uop_buff_entries=uop_entries)
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-64, 64, (m, k)).astype(np.int8)
+    B = rng.integers(-64, 64, (k, n)).astype(np.int8)
+    rh = 16
+    n_vec = -(-m // rh) * -(-n // rh) * rh
+    idx = tuple(int(v) for v in rng.choice(n_vec, size=n_vec // 2,
+                                           replace=False))
+    prog = compile_matmul(A, B, cfg=cfg,
+                          alu_ops=[AluImmOp.relu(),
+                                   AluIndexedImmOp(isa.AluOp.ADD, 3, idx)])
+    uop_loads = sum(1 for i in prog.instructions
+                    if isinstance(i, isa.MemInsn)
+                    and i.memory_type == isa.MemId.UOP)
+    if len(prog.uops) > uop_entries:
+        assert uop_loads > 1
+    verify_program(prog)
+
+
+def test_pair_groups_align_chunk_boundaries():
+    """Chunk segmentation never cuts through a pair group; infeasible
+    groups raise a clear ValueError."""
+    from repro.core.gemm_compiler import plan_chunks
+    cfg = VTAConfig(inp_buff_vectors=256, wgt_buff_matrices=8,
+                    acc_buff_vectors=32, out_buff_vectors=32,
+                    uop_buff_entries=64)
+    plan = plan_chunks(cfg, 5, 3, 1, 16, row_groups=[(0, 1), (2, 3)])
+    assert plan.alpha_segs == ((0, 2), (2, 2), (4, 1))
+    with pytest.raises(ValueError, match="spans more than one SRAM chunk"):
+        plan_chunks(cfg, 5, 3, 1, 16, row_groups=[(0, 2)])
+
+
 def test_bias_is_x_preload():
     """QKV-bias-style: bias (N,) broadcasts over rows via the ACC preload
     (C = A·B + X, §2.3)."""
