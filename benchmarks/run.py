@@ -14,11 +14,13 @@ import sys
 
 def main() -> None:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks import cifar_tables, kernel_bench, lenet_tables
+    from benchmarks import (cifar_tables, kernel_bench, lenet_tables,
+                            serving_tables)
 
     print("name,value,paper,derived/status")
     failures = 0
-    for row in lenet_tables.all_tables() + cifar_tables.all_tables():
+    for row in (lenet_tables.all_tables() + cifar_tables.all_tables()
+                + serving_tables.all_tables()):
         paper = row.get("paper")
         status = ""
         if paper is not None:

@@ -1,0 +1,97 @@
+"""Batched-serving throughput benchmarks (DESIGN.md §Batching).
+
+Images/sec by serving mode — the oracle-interpreter loop, the looped fast
+backend (one VTA chain per request, plans cached), and the batched
+runtime (one compiled plan per layer over the whole request batch) at
+several batch sizes.  All three produce bit-identical logits (enforced by
+tests/test_batched_serving.py); the table documents what the batch axis
+buys (EXPERIMENTS.md §Serving).  The headline row,
+``serve/lenet/batched_vs_loop_fast_speedup@32``, targets ≥ 2× (the
+ISSUE 3 acceptance criterion; measured 2.5–4.3× in this container).
+Timing rows are reported, not CI-gated — container throughput varies
+±30% run to run, so gating would flake; the bit-exactness contract is
+what the test suites enforce.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.network_compiler import compile_network
+from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                synthetic_digit)
+
+_ORACLE_IMAGES = 2          # the oracle loop is ~100× slower; sample it
+
+
+def _lenet():
+    return compile_network(lenet5_specs(lenet5_random_weights(0)),
+                           synthetic_digit(0))
+
+
+def _cifar():
+    from repro.models.cifar_cnn import (calibrate_shifts,
+                                        cifar_cnn_random_weights,
+                                        cifar_cnn_specs,
+                                        synthetic_cifar_image)
+    weights = cifar_cnn_random_weights(0)
+    shifts = calibrate_shifts(
+        weights, [synthetic_cifar_image(s) for s in range(1, 3)])
+    return compile_network(cifar_cnn_specs(weights, shifts),
+                           synthetic_cifar_image(0))
+
+
+def _images(net, n, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = net.input_tensor.shape
+    return [rng.integers(-64, 64, shape).astype(np.int8) for _ in range(n)]
+
+
+def _time_loop(net, images, backend):
+    t0 = time.perf_counter()
+    for img in images:
+        net.serve_one(img, backend=backend)
+    return len(images) / (time.perf_counter() - t0)
+
+
+def _time_batched(net, images):
+    t0 = time.perf_counter()
+    net.serve(images)
+    return len(images) / (time.perf_counter() - t0)
+
+
+def _serving_rows(tag: str, net, *, batches=(8, 32), loop_n=32,
+                  oracle_n=_ORACLE_IMAGES) -> List[Dict]:
+    rows: List[Dict] = []
+    images = _images(net, max(max(batches), loop_n), seed=1)
+    net.serve(images[:2])                       # warm plans + caches
+    net.serve_one(images[0], backend="fast")
+    if oracle_n:
+        rows.append({"name": f"serve/{tag}/loop_oracle_img_per_s",
+                     "value": round(_time_loop(net, images[:oracle_n],
+                                               "oracle"), 2),
+                     "paper": None})
+    loop_fast = _time_loop(net, images[:loop_n], "fast")
+    rows.append({"name": f"serve/{tag}/loop_fast_img_per_s",
+                 "value": round(loop_fast, 1), "paper": None})
+    batched_rate = {}
+    for b in batches:
+        batched_rate[b] = _time_batched(net, images[:b])
+        rows.append({"name": f"serve/{tag}/batched_img_per_s@{b}",
+                     "value": round(batched_rate[b], 1), "paper": None})
+    top = max(batches)
+    rows.append({"name": f"serve/{tag}/batched_vs_loop_fast_speedup@{top}",
+                 "value": round(batched_rate[top] / loop_fast, 2),
+                 "paper": None,
+                 "note": "target >= 2x (ISSUE 3 acceptance)"})
+    return rows
+
+
+def all_tables() -> List[Dict]:
+    rows = _serving_rows("lenet", _lenet())
+    rows += _serving_rows("cifar", _cifar(), batches=(8,), loop_n=8,
+                          oracle_n=0)
+    return rows

@@ -17,8 +17,13 @@ re-indexed against each chunk's local ACC window.
      reference.
 
     PYTHONPATH=src python examples/cifar10_cnn_e2e.py [--requests 4]
+                                                      [--batch 4]
                                                       [--backend fast|oracle]
                                                       [--skip-oracle]
+
+``--batch N`` serves the requests through the batched runtime (one
+compiled plan per layer over the whole group, DESIGN.md §Batching)
+instead of one VTA chain per image.
 """
 
 import argparse
@@ -49,11 +54,17 @@ def layer_stats(net) -> None:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="requests per batched VTA execution; 1 = serve "
+                         "per-image (default: 1)")
     ap.add_argument("--backend", choices=("fast", "oracle"), default="fast",
-                    help="backend for the request-serving loop")
+                    help="backend for the per-image serving loop")
     ap.add_argument("--skip-oracle", action="store_true",
                     help="skip the oracle cross-check (CI smoke mode)")
     args = ap.parse_args()
+    if args.batch > 1 and args.backend != "fast":
+        ap.error("--batch > 1 runs the batched engine; "
+                 "--backend oracle is per-image only (use --batch 1)")
 
     weights = cifar_cnn_random_weights(seed=0)
     print("calibrating static requant shifts (§4.2)...")
@@ -82,24 +93,32 @@ def main():
         np.testing.assert_array_equal(out_oracle, out_fast)
         print("  oracle and fast backends agree bit-for-bit")
 
-    try:                            # repo root on sys.path (pytest / -m)
-        from examples.lenet5_e2e import serve_request
-    except ImportError:             # run as python examples/cifar10_cnn_e2e.py
-        from lenet5_e2e import serve_request
     rng = np.random.default_rng(42)
+    images = [rng.integers(-64, 64, (1, 3, 32, 32)).astype(np.int8)
+              for _ in range(args.requests)]
     serve_s = 0.0
-    for r in range(args.requests):
-        img = rng.integers(-64, 64, (1, 3, 32, 32)).astype(np.int8)
-        t0 = time.perf_counter()
-        logits = serve_request(net, img, backend=args.backend)
-        serve_s += time.perf_counter() - t0
-        ref_logits, _ = reference_forward_int8(
-            weights, img, [l.requant_shift for l in net.layers])
+    logits_all = []
+    if args.batch > 1:
+        mode = f"batched (batch {args.batch})"
+        for lo in range(0, len(images), args.batch):
+            t0 = time.perf_counter()
+            outs, _ = net.serve(images[lo:lo + args.batch])
+            serve_s += time.perf_counter() - t0
+            logits_all.extend(outs)
+    else:
+        mode = f"per-image ({args.backend})"
+        for img in images:
+            t0 = time.perf_counter()
+            logits_all.append(net.serve_one(img, backend=args.backend))
+            serve_s += time.perf_counter() - t0
+    shifts = [l.requant_shift for l in net.layers]
+    for r, (img, logits) in enumerate(zip(images, logits_all)):
+        ref_logits, _ = reference_forward_int8(weights, img, shifts)
         assert np.array_equal(logits, ref_logits), f"request {r}: mismatch!"
     if args.requests:
         print(f"\nserved {args.requests} requests in {serve_s:.2f}s "
-              f"({args.requests / serve_s:.1f} req/s on the {args.backend} "
-              f"backend); bit-exact vs integer reference: "
+              f"({args.requests / serve_s:.1f} img/s, {mode}); "
+              f"bit-exact vs integer reference: "
               f"{args.requests}/{args.requests}")
 
 

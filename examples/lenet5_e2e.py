@@ -2,18 +2,22 @@
 compiler pipeline with batched requests — the paper's own workload (§4.3).
 
   1. compile all 5 layers into one shared DRAM allocation (Fig. 12);
-  2. serve a batch of digit-classification requests: per request, the host
-     re-binarises the input, launches the 5 chained VTA executions on the
-     functional simulator, and reads back the logits;
+  2. serve a batch of digit-classification requests — per-image
+     (``--batch 1``: host re-binarises the input, launches the 5 chained
+     VTA executions, reads back the logits) or truly batched
+     (``--batch N``: one compiled plan per layer executes over the whole
+     request batch at once, DESIGN.md §Batching);
   3. verify every answer bit-exactly against the integer reference and
      report agreement with the float (JAX) model + the §5 tables.
 
     PYTHONPATH=src python examples/lenet5_e2e.py [--requests 16]
+                                                 [--batch 8]
                                                  [--backend fast|oracle]
 
 ``--backend fast`` (the default) serves on the vectorised plan-compiling
-simulator; ``--backend oracle`` uses the per-struct reference interpreter.
-Both are bit-exact — the fast path just gets there ~10× sooner.
+simulator; ``--backend oracle`` uses the per-struct reference interpreter
+(per-image serving only).  All paths are bit-exact — batching just gets
+there sooner (EXPERIMENTS.md §Serving).
 """
 
 import argparse
@@ -22,10 +26,7 @@ import time
 import numpy as np
 
 from repro.core.cycle_model import FPGA_CLOCK_HZ
-from repro.core.layout import matrix_to_binary
 from repro.core.network_compiler import compile_network
-from repro.core.simulator import (decode_out_region, make_simulator,
-                                  run_instructions)
 from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
                                 reference_forward_float,
                                 reference_forward_int8)
@@ -34,45 +35,24 @@ from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
 def serve_request(net, image: np.ndarray, *,
                   backend: str = "fast") -> np.ndarray:
     """One inference: rewrite the layer-1 INP region for this image, then
-    run the 5 chained VTA executions (Fig. 12)."""
-    from repro.core.layer_compiler import layer_matrices
-    image = image.astype(np.int8)
-    first = net.layers[0]
-    A, _, _ = layer_matrices(first.spec, image)
-    inp_bin, _ = matrix_to_binary(A, net.config.block_size,
-                                  net.config.inp_dtype)
-    image_mem = net.dram_image()
-    region = first.program.regions["inp"]
-    start = region.phys_addr - net.allocator.offset
-    image_mem[start:start + len(inp_bin)] = np.frombuffer(inp_bin, np.uint8)
-
-    out = None
-    for k, layer in enumerate(net.layers):
-        sim = make_simulator(net.config, image_mem, backend=backend)
-        run_instructions(sim, layer.program.instructions,
-                         program=layer.program)
-        image_mem = sim.dram
-        out_mat = decode_out_region(layer.program, image_mem)
-        from repro.core.layer_compiler import decode_layer_output
-        semantic = decode_layer_output(layer, out_mat)
-        if k + 1 < len(net.layers):
-            nxt = net.layers[k + 1]
-            A, _, _ = layer_matrices(nxt.spec, semantic)
-            nxt_bin, _ = matrix_to_binary(A, net.config.block_size,
-                                          net.config.inp_dtype)
-            r = nxt.program.regions["inp"]
-            s = r.phys_addr - net.allocator.offset
-            image_mem[s:s + len(nxt_bin)] = np.frombuffer(nxt_bin, np.uint8)
-        out = semantic
-    return out
+    run the 5 chained VTA executions (Fig. 12).  Thin wrapper kept for
+    compatibility — the logic lives in ``NetworkProgram.serve_one``."""
+    return net.serve_one(image.astype(np.int8), backend=backend)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="requests per batched VTA execution; 1 = serve "
+                         "per-image (default: 1)")
     ap.add_argument("--backend", choices=("fast", "oracle"), default="fast",
-                    help="functional-simulator backend (default: fast)")
+                    help="functional-simulator backend for per-image "
+                         "serving (default: fast)")
     args = ap.parse_args()
+    if args.batch > 1 and args.backend != "fast":
+        ap.error("--batch > 1 runs the batched engine; "
+                 "--backend oracle is per-image only (use --batch 1)")
 
     weights = lenet5_random_weights(seed=0)
     print("compiling LeNet-5 through the VTA pipeline...")
@@ -95,23 +75,40 @@ def main():
     shifts = [l.requant_shift for l in net.layers]
 
     rng = np.random.default_rng(42)
-    agree_float = 0
+    images = [rng.integers(0, 128, (1, 1, 32, 32)).astype(np.int8)
+              for _ in range(args.requests)]
+    logits_all = []
     serve_s = 0.0
-    for r in range(args.requests):
-        img = rng.integers(0, 128, (1, 1, 32, 32)).astype(np.int8)
-        t0 = time.perf_counter()
-        logits = serve_request(net, img, backend=args.backend)
-        serve_s += time.perf_counter() - t0
+    if args.batch > 1:
+        mode = f"batched (batch {args.batch})"
+        for lo in range(0, len(images), args.batch):
+            group = images[lo:lo + args.batch]
+            t0 = time.perf_counter()
+            outs, _ = net.serve(group)
+            serve_s += time.perf_counter() - t0
+            logits_all.extend(outs)
+    else:
+        mode = f"per-image ({args.backend})"
+        for img in images:
+            t0 = time.perf_counter()
+            logits_all.append(serve_request(net, img,
+                                            backend=args.backend))
+            serve_s += time.perf_counter() - t0
+
+    agree_float = 0
+    for r, (img, logits) in enumerate(zip(images, logits_all)):
         ref_logits, _ = reference_forward_int8(weights, img, shifts)
         assert np.array_equal(logits, ref_logits), f"request {r}: mismatch!"
         fl = reference_forward_float(weights, img)
         agree_float += int(np.argmax(logits) == np.argmax(fl))
-    print(f"\nserved {args.requests} requests in {serve_s:.2f}s "
-          f"({args.requests / serve_s:.1f} req/s on the {args.backend} "
-          f"functional simulator; verification excluded)")
-    print(f"bit-exact vs integer reference: {args.requests}/{args.requests}")
-    print(f"argmax agreement with float model: "
-          f"{agree_float}/{args.requests}")
+    if args.requests:
+        print(f"\nserved {args.requests} requests in {serve_s:.2f}s "
+              f"({args.requests / serve_s:.1f} img/s, {mode} on the "
+              f"functional simulator; verification excluded)")
+        print(f"bit-exact vs integer reference: "
+              f"{args.requests}/{args.requests}")
+        print(f"argmax agreement with float model: "
+              f"{agree_float}/{args.requests}")
 
 
 if __name__ == "__main__":

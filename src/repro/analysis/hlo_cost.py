@@ -190,11 +190,21 @@ def _group_geometry(rest: str, n_devices: int) -> Tuple[int, bool]:
 def _dot_flops(op: OpLine, shapes: Dict[str, str]) -> float:
     out = shape_dims(op.shape)
     contract = 1
-    m = re.match(r"%([\w.\-]+)", op.rest)
+    # The lhs operand: newer XLA dumps type every operand inline
+    # ("dot(f32[128,256]{1,0} %Arg_0.1, ...)"), so the first token of
+    # ``rest`` is a shape, not a %name — search for the first %name and
+    # fall back to the inline operand shape when the name isn't resolvable.
+    m = re.search(r"%([\w.\-]+)", op.rest)
     dims_attrs = {f"{a}_{b}": v for a, b, v in _DIMS_RE.findall(op.rest)}
     lhs_c = dims_attrs.get("lhs_contracting", "")
-    if m and m.group(1) in shapes and lhs_c:
-        lhs_dims = shape_dims(shapes[m.group(1)])
+    if lhs_c:
+        lhs_dims: List[int] = []
+        if m and m.group(1) in shapes:
+            lhs_dims = shape_dims(shapes[m.group(1)])
+        if not lhs_dims:
+            inline = _SHAPE_RE.search(op.rest)
+            if inline:
+                lhs_dims = shape_dims(inline.group(0))
         for idx in lhs_c.split(","):
             if idx and int(idx) < len(lhs_dims):
                 contract *= lhs_dims[int(idx)]
@@ -410,6 +420,19 @@ class CostWalker:
                 n, _ = shape_numel_bytes(comp.shapes[name])
                 total += n
         return total
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalise ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-device list of dicts, newer returns the dict
+    directly; either way the caller wants one flat ``{"flops": …}`` dict
+    (device 0 — post-SPMD modules are identical per device).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 
 def analyze_hlo(text: str, n_devices: int,

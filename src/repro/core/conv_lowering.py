@@ -69,21 +69,30 @@ def im2row(tensor: np.ndarray, kh: int, kw: int, stride: int = 1,
     """Input tensor ``(1, C, H, W)`` → input matrix ``(H'·W', C·kh·kw)``."""
     if tensor.ndim != 4 or tensor.shape[0] != 1:
         raise ValueError(f"expected (1, C, H, W) tensor, got {tensor.shape}")
-    _, c, h, w = tensor.shape
+    return im2row_batch(tensor, kh, kw, stride, pad)[0]
+
+
+def im2row_batch(tensor: np.ndarray, kh: int, kw: int, stride: int = 1,
+                 pad: int = 0) -> np.ndarray:
+    """Batched im2row: ``(B, C, H, W)`` → ``(B, H'·W', C·kh·kw)``.
+
+    One strided window view + transpose per batch — the per-request
+    staging of the serving path (DESIGN.md §Batching) runs through here.
+    Row ``b`` equals ``im2row(tensor[b:b+1], ...)`` exactly: patch rows
+    ordered (i, j) row-major, each patch flattened channel-major.
+    """
+    if tensor.ndim != 4:
+        raise ValueError(f"expected (B, C, H, W) tensor, got {tensor.shape}")
+    b, c, h, w = tensor.shape
     geo = ConvGeometry(c, h, w, kh, kw, stride, pad)
     oh, ow = geo.out_h, geo.out_w
     if oh <= 0 or ow <= 0:
         raise ValueError("kernel larger than (padded) input")
-    x = _pad_spatial(tensor, pad)[0]
-    # Gather patches: rows ordered (i, j) row-major; patch channel-major.
-    out = np.empty((oh * ow, geo.patch_len), dtype=tensor.dtype)
-    r = 0
-    for i in range(oh):
-        for j in range(ow):
-            patch = x[:, i * stride:i * stride + kh, j * stride:j * stride + kw]
-            out[r] = patch.reshape(-1)
-            r += 1
-    return out
+    x = _pad_spatial(tensor, pad)
+    win = np.lib.stride_tricks.sliding_window_view(x, (kh, kw), axis=(2, 3))
+    win = win[:, :, ::stride, ::stride]          # (B, C, oh, ow, kh, kw)
+    return np.ascontiguousarray(
+        win.transpose(0, 2, 3, 1, 4, 5)).reshape(b, oh * ow, geo.patch_len)
 
 
 def ker2col(weights: np.ndarray) -> np.ndarray:

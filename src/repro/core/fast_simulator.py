@@ -41,6 +41,13 @@ plans precompute only the *geometry* lattices, while GEMM/ALU steps gather
 their uops from ``uop_buf`` at execution time — so mid-stream LOAD_UOP
 waves that rewrite slots 1.. between instructions are observed exactly as
 on the oracle, and the cached per-program plan stays valid across waves.
+
+**Batched serving** (DESIGN.md §Batching): :class:`BatchFastSimulator` /
+:func:`run_batch` execute one compiled plan over a ``(batch, nbytes)``
+DRAM stack — batched strided LOAD/STORE, the GEMM as one exact BLAS
+contraction over ``(batch, uop)``, the ALU vectorised across the batch —
+bit-identical to looping a single-image simulator over the stack's rows
+(enforced by tests/test_batched_conformance.py).
 """
 
 from __future__ import annotations
@@ -59,6 +66,14 @@ from .simulator import SimReport, TokenQueues, VTAHazardError  # noqa: F401
 # materialises block_size² int64 per lattice point).
 _GEMM_CHUNK_BYTES = 64 << 20
 
+# The batched GEMM runs on BLAS sgemm: a float32 mantissa holds integers up
+# to 2**24 exactly, and a per-lane dot of ``n`` int8×int8 products is
+# bounded by n·2¹⁴ (the extreme product is (-128)·(-128) = 16384), so for
+# dots up to this many terms the float path is bit-exact; larger
+# contractions fall back to the (wrap-congruent) int32 einsum.
+_F32_EXACT_MAX_TERMS = (1 << 24) // (128 * 128)       # 1024
+_F32_EXACT_MAX_BS = _F32_EXACT_MAX_TERMS
+
 
 # ---------------------------------------------------------------------------
 # Plan steps
@@ -74,6 +89,8 @@ class _LoadStep:
     sram_idx: np.ndarray        # (n,) destination structure indices
     byte_idx: np.ndarray        # (n, nbytes) DRAM byte gather lattice
     end_byte: int               # max byte index + 1, for the bounds check
+    contig: bool = False        # SRAM span and DRAM bytes both contiguous
+    byte_start: int = 0         # first DRAM byte (contig fast path)
 
 
 @dataclasses.dataclass
@@ -165,9 +182,19 @@ def _compile_load(cfg: VTAConfig, m: isa.MemInsn) -> _LoadStep:
     byte_idx = (log_addr[:, None] * nbytes
                 + np.arange(nbytes, dtype=np.int64)[None, :])
     end_byte = int(byte_idx.max(initial=-1)) + 1
+    n = sram_idx.size
+    contig = bool(
+        n and not has_pad
+        and np.array_equal(sram_idx,
+                           np.arange(sram_idx[0], sram_idx[0] + n))
+        and np.array_equal(byte_idx.reshape(-1),
+                           np.arange(byte_idx[0, 0],
+                                     byte_idx[0, 0] + n * nbytes)))
     return _LoadStep(kind=kind, mem=m.memory_type, nbytes=nbytes,
                      zero_base=m.sram_base, zero_len=zero_len,
-                     sram_idx=sram_idx, byte_idx=byte_idx, end_byte=end_byte)
+                     sram_idx=sram_idx, byte_idx=byte_idx, end_byte=end_byte,
+                     contig=contig,
+                     byte_start=int(byte_idx[0, 0]) if n else 0)
 
 
 def _compile_store(cfg: VTAConfig, m: isa.MemInsn) -> _StoreStep:
@@ -520,3 +547,390 @@ class FastSimulator:
             if isinstance(step, _FinishStep):
                 break
         return self.report
+
+
+# ---------------------------------------------------------------------------
+# Batched execution: one plan, N DRAM images (DESIGN.md §Batching)
+# ---------------------------------------------------------------------------
+
+class BatchFastSimulator(FastSimulator):
+    """One compiled :class:`InstructionPlan`, a ``(batch, nbytes)`` DRAM
+    stack: the batch axis is vectorized through every instruction.
+
+    Every SRAM buffer grows a leading batch axis; LOAD/STORE run as
+    batched strided gathers/scatters, GEMM as one einsum over the whole
+    ``batch × lattice`` with per-image indices flattened into one global
+    index space (row *b*'s indices are offset by ``b · buffer_len``, so
+    batches can never alias and the order-independent merges of the
+    single-image path stay exact), and ALU reuses the single-image merge
+    kernels over the same flattened space.  Semantically the run is
+    bit-identical to looping a single-image simulator over the stack's
+    rows — the differential conformance suite
+    (``tests/test_batched_conformance.py``) enforces exactly that.
+
+    The :class:`~repro.core.simulator.SimReport` accumulates *batch
+    totals*: loop counts and DRAM traffic equal the sum over the
+    per-image oracle reports (i.e. ``batch ×`` the single-image values),
+    while ``insn_executed``/``insn_trace`` count the instruction stream
+    once — it is fetched and decoded once, which is the whole point.
+    """
+
+    def __init__(self, cfg: VTAConfig, dram: np.ndarray, *,
+                 trace: bool = False, copy_dram: bool = True):
+        if dram.dtype != np.uint8:
+            raise TypeError("dram stack must be uint8")
+        if dram.ndim != 2 or dram.shape[0] < 1:
+            raise ValueError(
+                "batched dram image must be (batch, nbytes) with batch >= 1")
+        self.cfg = cfg
+        self.batch = int(dram.shape[0])
+        # copy_dram=False hands the stack over without the defensive copy —
+        # the serve loop owns its stack and re-reads it from ``sim.dram``,
+        # so the copy would be pure overhead there.
+        self.dram = dram.copy() if copy_dram else dram
+        self.trace = trace
+        bs = cfg.block_size
+        b = self.batch
+        self.uop_buf = np.zeros((b, cfg.uop_buff_entries, 3), dtype=np.int64)
+        self.inp_buf = np.zeros((b, cfg.inp_buff_vectors, bs), dtype=np.int8)
+        self.wgt_buf = np.zeros((b, cfg.wgt_buff_matrices, bs, bs),
+                                dtype=np.int8)
+        self.acc_buf = np.zeros((b, cfg.acc_buff_vectors, bs), dtype=np.int32)
+        self.out_buf = np.zeros((b, cfg.out_buff_vectors, bs), dtype=np.int8)
+        self.tokens = TokenQueues()
+        self.report = SimReport()
+        # Batch-uniformity flags: True while every image in the batch holds
+        # byte-identical UOP / WGT SRAM contents (the serving case — only
+        # INP differs per request).  Uniform batches take the shared-lattice
+        # fast paths: the uop lattice, the weight gather and the scatter
+        # grouping are computed once per instruction instead of per image.
+        # The flags start True (zero-initialised SRAM is uniform) and latch
+        # False on the first non-uniform LOAD; the general per-image paths
+        # stay bit-exact either way.
+        self._uniform = {"uop": True, "wgt": True}
+
+    # -------------------------------------------------------------- mem --
+    def _exec_load(self, p: _LoadStep) -> None:
+        if p.end_byte > self.dram.shape[1]:
+            raise IndexError(
+                f"DRAM read out of range: {p.kind} load ends @{p.end_byte:#x}")
+        buf = self._buf_of(p.kind)
+        if p.zero_len:
+            buf[:, p.zero_base:p.zero_base + p.zero_len] = 0
+        if p.sram_idx.size:
+            n = p.sram_idx.size
+            if p.contig:                              # one strided slice
+                raw = self.dram[:, p.byte_start:p.byte_start + n * p.nbytes]
+            else:
+                raw = self.dram[:, p.byte_idx]        # (B, n, nbytes)
+            if p.kind in self._uniform and self._uniform[p.kind]:
+                self._uniform[p.kind] = bool(np.all(raw == raw[:1]))
+            # the gather can come back with transposed strides; the struct
+            # decoders reinterpret the last axis, which must be contiguous
+            raw = np.ascontiguousarray(raw).reshape(self.batch * n, p.nbytes)
+            dec = self._decode_structs(p.kind, raw)
+            if p.contig:
+                s0 = int(p.sram_idx[0])
+                buf[:, s0:s0 + n] = dec.reshape(
+                    (self.batch, n) + dec.shape[1:])
+            else:
+                buf[:, p.sram_idx] = dec.reshape(
+                    (self.batch, n) + dec.shape[1:])
+        self.report.dram_bytes_read += p.byte_idx.size * self.batch
+
+    def _exec_store(self, p: _StoreStep) -> None:
+        if p.n == 0:
+            return
+        if p.end_byte > self.dram.shape[1]:
+            raise IndexError(
+                f"DRAM write out of range: {p.kind} store ends "
+                f"@{p.end_byte:#x}")
+        buf = self._buf_of(p.kind)
+        data = buf[:, p.sram_base:p.sram_base + p.n]
+        if data.shape[1] < p.n:
+            raise IndexError(f"SRAM read out of range: {p.kind} store")
+        raw = self._encode_structs(
+            p.kind, data.reshape((self.batch * p.n,) + data.shape[2:]))
+        raw = raw.reshape(self.batch, p.n, p.nbytes)
+        if p.byte_idx is not None:
+            self.dram[:, p.byte_idx] = raw
+        else:                      # overlapping rows: write in order
+            rows = raw.reshape(self.batch, -1, p.row_bytes)
+            for y, start in enumerate(p.row_dram_starts):
+                self.dram[:, start:start + p.row_bytes] = rows[:, y]
+        self.report.dram_bytes_written += raw.size
+
+    # ------------------------------------------------------------ index --
+    def _batch_lattice(self, off: np.ndarray, u_field: np.ndarray,
+                       span: int, what: str) -> np.ndarray:
+        """Per-image ``(P,)×(nu,)`` lattices → one flattened global index
+        array, row *b* offset by ``b · span``.  Per-image indices are
+        bounds-checked *before* the offset so an out-of-range program
+        raises (as the oracle would) instead of aliasing into the next
+        image's buffer."""
+        lat = off[None, :, None] + u_field[:, None, :]        # (B, P, nu)
+        if lat.size:
+            hi = int(lat.max())
+            if hi >= span or int(lat.min()) < 0:
+                raise IndexError(
+                    f"{what} index {hi} out of range for buffer of {span}")
+        lat = lat + (np.arange(self.batch, dtype=np.int64)
+                     * span)[:, None, None]
+        return lat.reshape(-1)
+
+    # ------------------------------------------------------------- gemm --
+    def _shared_lattice(self, off: np.ndarray, u_field: np.ndarray
+                        ) -> np.ndarray:
+        """Single-image lattice shared by the whole (uniform-UOP) batch."""
+        return (off[:, None] + u_field[None, :]).reshape(-1)
+
+    def _exec_gemm(self, p: _GemmStep) -> None:
+        if p.loop_count == 0:
+            return
+        if self._uniform["uop"]:
+            self._gemm_shared(p)
+        else:
+            self._gemm_general(p)
+        field = ("gemm_reset_loops" if p.reset else "gemm_loops")
+        setattr(self.report, field,
+                getattr(self.report, field) + p.loop_count * self.batch)
+
+    def _gemm_shared(self, p: _GemmStep) -> None:
+        """Uniform UOP buffers: one lattice, one scatter grouping — and,
+        when the WGT buffers are uniform too (the serving case), one weight
+        gather — for the whole batch.  Products accumulate in int32, which
+        wraps mod 2**32 exactly like the oracle's per-step truncation."""
+        uop = self.uop_buf[0, p.u_idx]                        # (nu, 3)
+        x_idx = self._shared_lattice(p.off_acc, uop[:, 0])
+        if p.reset:
+            self.acc_buf[:, x_idx] = 0
+            return
+        a_idx = self._shared_lattice(p.off_inp, uop[:, 1])
+        w_idx = self._shared_lattice(p.off_wgt, uop[:, 2])
+        bs = self.cfg.block_size
+        b = self.batch
+        w_uniform = self._uniform["wgt"]
+        f32 = bs <= _F32_EXACT_MAX_BS
+        # Fused-contraction form: when every destination vector receives
+        # the same number ``c`` of lattice points (the compiled-matmul
+        # k-loop shape), fold the duplicate-destination reduction into the
+        # BLAS contraction itself — one (G, bs, c·bs) @ (G, c·bs, B) sgemm
+        # stack computes GEMM *and* merge in one pass.  Exact while the
+        # c·bs-term dot stays within float32's 2**24 integer range.
+        shared_group = None
+        if w_uniform:
+            order, sidx, starts = _group(x_idx)
+            shared_group = (order, sidx, starts)
+            counts = np.diff(np.r_[starts, x_idx.size])
+            if (counts.size and int(counts.min()) == int(counts.max())
+                    and int(counts[0]) * bs <= _F32_EXACT_MAX_TERMS):
+                self._gemm_shared_fused(a_idx, w_idx, order,
+                                        sidx[starts], int(counts[0]))
+                return
+        per_point = bs * bs * (1 if w_uniform else b) * 4 + 9 * b * bs
+        chunk = max(1, _GEMM_CHUNK_BYTES // per_point)
+        for lo in range(0, x_idx.size, chunk):
+            sl = slice(lo, lo + chunk)
+            A = self.inp_buf[:, a_idx[sl]]                    # (B, l, bs)
+            if w_uniform:
+                W = self.wgt_buf[0, w_idx[sl]]                # (l, bs, bs)
+                if f32:
+                    # one BLAS sgemm stack: (l,bs,bs) @ (l,bs,B) — the
+                    # weight operand is shared by the whole batch
+                    prod = np.matmul(
+                        W.astype(np.float32),
+                        A.transpose(1, 2, 0).astype(np.float32)
+                    ).transpose(2, 0, 1).astype(np.int32)     # (B, l, bs)
+                else:
+                    prod = np.einsum("lij,blj->bli", W, A, dtype=np.int32)
+            else:
+                W = self.wgt_buf[:, w_idx[sl]]                # (B, l, bs, bs)
+                if f32:
+                    prod = np.matmul(
+                        W.astype(np.float32),
+                        A.astype(np.float32)[..., None]
+                    )[..., 0].astype(np.int32)
+                else:
+                    prod = np.einsum("blij,blj->bli", W, A, dtype=np.int32)
+            # merge duplicate destinations, then one scatter-add; chunks
+            # compose because int32 adds wrap exactly mod 2**32
+            if shared_group is not None and chunk >= x_idx.size:
+                order, sidx, starts = shared_group     # whole lattice: reuse
+            else:
+                order, sidx, starts = _group(x_idx[sl])
+            red = np.add.reduceat(prod[:, order], starts, axis=1)
+            self.acc_buf[:, sidx[starts]] += red              # int32 wrap
+
+    def _gemm_shared_fused(self, a_idx: np.ndarray, w_idx: np.ndarray,
+                           order: np.ndarray, ud: np.ndarray,
+                           c: int) -> None:
+        """Uniform-W regular-lattice GEMM: destination-grouped operands,
+        reduction fused into the matmul contraction (addition is
+        commutative and the float32 dots are exact, so any within-group
+        order gives the oracle's mod-2**32 result)."""
+        bs = self.cfg.block_size
+        b = self.batch
+        ncon = c * bs                                 # contraction length
+        g = ud.size
+        ao = a_idx[order].reshape(g, c)
+        wo = w_idx[order].reshape(g, c)
+        per_group = ncon * (bs + b) * 8               # f32 Wg + Ag + prod
+        gchunk = max(1, _GEMM_CHUNK_BYTES // per_group)
+        for lo in range(0, g, gchunk):
+            sl = slice(lo, lo + gchunk)
+            Wg = self.wgt_buf[0, wo[sl]]              # (g, c, bs, bs)
+            Wg = np.ascontiguousarray(
+                Wg.transpose(0, 2, 1, 3)).reshape(-1, bs, ncon)
+            Ag = self.inp_buf[:, ao[sl]]              # (B, g, c, bs)
+            Ag = np.ascontiguousarray(
+                Ag.transpose(1, 2, 3, 0)).reshape(-1, ncon, b)
+            prod = np.matmul(Wg.astype(np.float32), Ag.astype(np.float32))
+            red = prod.transpose(2, 0, 1).astype(np.int32)    # (B, g, bs)
+            self.acc_buf[:, ud[sl]] += red            # int32 wrap
+
+    def _gemm_general(self, p: _GemmStep) -> None:
+        """Per-image UOP buffers: flatten every image's lattice into one
+        global index space (row *b* offset by ``b · buffer_len``) and run
+        one einsum + scatter over the whole batch."""
+        uop = self.uop_buf[:, p.u_idx]                        # (B, nu, 3)
+        n_acc = self.acc_buf.shape[1]
+        x_idx = self._batch_lattice(p.off_acc, uop[:, :, 0], n_acc, "ACC")
+        bs = self.cfg.block_size
+        acc_flat = self.acc_buf.reshape(-1, bs)
+        if p.reset:
+            acc_flat[x_idx] = 0
+            return
+        a_idx = self._batch_lattice(p.off_inp, uop[:, :, 1],
+                                    self.inp_buf.shape[1], "INP")
+        w_idx = self._batch_lattice(p.off_wgt, uop[:, :, 2],
+                                    self.wgt_buf.shape[1], "WGT")
+        inp_flat = self.inp_buf.reshape(-1, bs)
+        wgt_flat = self.wgt_buf.reshape(-1, bs, bs)
+        f32 = bs <= _F32_EXACT_MAX_BS
+        chunk = max(1, _GEMM_CHUNK_BYTES // (bs * bs * 4))
+        for lo in range(0, x_idx.size, chunk):
+            sl = slice(lo, lo + chunk)
+            A = inp_flat[a_idx[sl]]                           # (l, bs) int8
+            W = wgt_flat[w_idx[sl]]                           # (l, bs, bs)
+            if f32:
+                prod = np.matmul(
+                    W.astype(np.float32), A.astype(np.float32)[..., None]
+                )[..., 0].astype(np.int32)
+            else:
+                prod = np.einsum("lij,lj->li", W, A, dtype=np.int32)
+            order, sidx, starts = _group(x_idx[sl])
+            red = np.add.reduceat(prod[order], starts, axis=0)
+            acc_flat[sidx[starts]] += red                     # int32 wrap
+
+    # -------------------------------------------------------------- alu --
+    def _exec_alu(self, p: _AluStep) -> None:
+        if p.loop_count == 0:
+            return
+        bs = self.cfg.block_size
+        n_acc = self.acc_buf.shape[1]
+        if self._uniform["uop"]:
+            uop = self.uop_buf[0, p.u_idx]
+            d_idx = self._shared_lattice(p.off_dst, uop[:, 0])
+            if d_idx.size and (int(d_idx.max()) >= n_acc
+                               or int(d_idx.min()) < 0):
+                raise IndexError("ACC dst index out of range")
+            if p.use_imm:
+                self._alu_imm_shared(p, d_idx)
+            else:
+                s_idx = self._shared_lattice(p.off_src, uop[:, 1])
+                if s_idx.size and (int(s_idx.max()) >= n_acc
+                                   or int(s_idx.min()) < 0):
+                    # pre-offset bounds check, as in _batch_lattice: an
+                    # out-of-range source must raise (as the oracle does),
+                    # never read a neighbouring image's ACC rows
+                    raise IndexError("ACC src index out of range")
+                if np.intersect1d(d_idx, s_idx).size:
+                    # Same RAW pattern on every image: flatten globally and
+                    # run the oracle-order loop once per (image, point).
+                    acc64 = self.acc_buf.astype(np.int64)
+                    flat = acc64.reshape(-1, bs)
+                    base = (np.arange(self.batch, dtype=np.int64)
+                            * n_acc)[:, None]
+                    gd = (d_idx[None, :] + base).reshape(-1)
+                    gs = (s_idx[None, :] + base).reshape(-1)
+                    self._alu_sequential(flat, p.op, gd, gs)
+                    self.acc_buf[:] = acc64.astype(np.int32)
+                else:
+                    self._alu_pair_shared(p.op, d_idx, s_idx)
+        else:
+            uop = self.uop_buf[:, p.u_idx]
+            d_idx = self._batch_lattice(p.off_dst, uop[:, :, 0], n_acc,
+                                        "ACC dst")
+            acc_flat = self.acc_buf.reshape(-1, bs)
+            acc64 = acc_flat.astype(np.int64)
+            if p.use_imm:
+                self._alu_imm(acc64, p, d_idx)
+            else:
+                s_idx = self._batch_lattice(p.off_src, uop[:, :, 1], n_acc,
+                                            "ACC src")
+                if np.intersect1d(d_idx, s_idx).size:
+                    # Flattened order is batch-major and batches are
+                    # disjoint in the global index space, so this equals
+                    # the oracle's per-image loop order on every image.
+                    self._alu_sequential(acc64, p.op, d_idx, s_idx)
+                else:
+                    self._alu_pair(acc64, p.op, d_idx, s_idx)
+            acc_flat[:] = acc64.astype(np.int32)
+        self.report.alu_loops += p.loop_count * self.batch
+
+    def _alu_imm_shared(self, p: _AluStep, d_idx: np.ndarray) -> None:
+        """Immediate-form ALU over a shared lattice: group once, apply the
+        merged op across the batch axis (same merges as the single-image
+        :meth:`FastSimulator._alu_imm`).  Only the touched ACC rows are
+        widened to int64 and truncated back — untouched rows never move."""
+        imm = np.int64(p.imm)
+        order, sidx, starts = _group(d_idx)
+        ud = sidx[starts]
+        sub = self.acc_buf[:, ud].astype(np.int64)            # (B, G, bs)
+        if p.op in (isa.AluOp.MIN, isa.AluOp.MAX):
+            sub = self._alu_elementwise(p.op, sub, imm)
+        elif p.op == isa.AluOp.ADD:
+            counts = np.diff(np.r_[starts, d_idx.size]).astype(np.int64)
+            sub += imm * counts[None, :, None]
+        else:  # SHR
+            counts = np.diff(np.r_[starts, d_idx.size]).astype(np.int64)
+            shift = np.minimum((imm & 31) * counts, 63)
+            sub >>= shift[None, :, None]
+        self.acc_buf[:, ud] = sub.astype(np.int32)            # wrap-around
+
+    def _alu_pair_shared(self, op: isa.AluOp, d_idx: np.ndarray,
+                         s_idx: np.ndarray) -> None:
+        """Vector-pair ALU over a shared lattice (sources disjoint from
+        destinations on every image); touched rows only, as above."""
+        svals = self.acc_buf[:, s_idx].astype(np.int64)       # (B, L, bs)
+        order, sidx, starts = _group(d_idx)
+        ud = sidx[starts]
+        svals = svals[:, order]
+        sub = self.acc_buf[:, ud].astype(np.int64)            # (B, G, bs)
+        if op == isa.AluOp.ADD:
+            sub += np.add.reduceat(svals, starts, axis=1)
+        elif op == isa.AluOp.MIN:
+            sub = np.minimum(sub, np.minimum.reduceat(svals, starts, axis=1))
+        elif op == isa.AluOp.MAX:
+            sub = np.maximum(sub, np.maximum.reduceat(svals, starts, axis=1))
+        else:  # SHR
+            shift = np.minimum(
+                np.add.reduceat(svals & 31, starts, axis=1), 63)
+            sub >>= shift
+        self.acc_buf[:, ud] = sub.astype(np.int32)            # wrap-around
+
+
+def run_batch(cfg: VTAConfig, dram_stack: np.ndarray, instructions, *,
+              plan: Optional[InstructionPlan] = None, trace: bool = False
+              ) -> Tuple[np.ndarray, SimReport]:
+    """Execute one instruction stream over a ``(batch, nbytes)`` DRAM stack.
+
+    Returns ``(dram_stack_after, report)``.  Bit-identical to running the
+    single-image simulator over each row of the stack independently; pass
+    a cached ``plan`` (:func:`plan_for`) to amortise plan compilation
+    across calls — the compile-once/serve-many path of
+    :meth:`repro.core.network_compiler.NetworkProgram.serve`.
+    """
+    sim = BatchFastSimulator(cfg, np.asarray(dram_stack), trace=trace)
+    report = sim.run(instructions, plan=plan)
+    return sim.dram, report

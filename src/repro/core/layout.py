@@ -21,8 +21,10 @@ def pad_to_multiple(n: int, multiple: int) -> int:
 def truncate_int8(x: np.ndarray) -> np.ndarray:
     """The ACC→OUT truncation (§2.1): keep the low 8 bits, reinterpreted
     as int8.  The single definition of the idiom — the simulators' commit,
-    the layer references and the model references all route through it."""
-    return (x & 0xFF).astype(np.uint8).view(np.int8).astype(np.int8)
+    the layer references and the model references all route through it.
+    (A C-style integer downcast keeps exactly the low byte, so this is the
+    former ``(x & 0xFF).astype(uint8)`` in one pass.)"""
+    return np.asarray(x).astype(np.uint8).view(np.int8)
 
 
 def matrix_padding(mat: np.ndarray, block_size: int, *,
@@ -165,3 +167,34 @@ def matrix_to_binary(mat: np.ndarray, block_size: int, dtype: np.dtype, *,
     padded = matrix_padding(mat, block_size, pad_height=pad_height)
     split = matrix_splitting(padded, block_size)
     return binarize_blocks(split, dtype, transpose=transpose), split
+
+
+def batch_matrix_to_binary(mats: np.ndarray, block_size: int,
+                           dtype: np.dtype) -> np.ndarray:
+    """Batched pad → split → binarise: ``(B, M, K)`` → ``(B, nbytes)`` uint8.
+
+    Row ``b`` is byte-identical to ``matrix_to_binary(mats[b], ...)[0]`` —
+    all images share one geometry, so the block split is a single reshape/
+    transpose over the stack instead of B × per-block Python loops.  This
+    is the INP-staging kernel of the serving path (DESIGN.md §Batching);
+    the WGT-side ``transpose`` variant is not needed there (weights are
+    staged once at compile time) and is intentionally not replicated.
+    """
+    if mats.ndim != 3:
+        raise ValueError(f"expected a (B, M, K) stack, got {mats.shape}")
+    b, h, w = mats.shape
+    # all images share one geometry — derive it through the single-image
+    # helpers (one representative pass) so the rules can never drift
+    split0 = matrix_splitting(
+        matrix_padding(mats[0], block_size,
+                       pad_height=should_pad_height(mats[0])), block_size)
+    new_h, new_w = split0.padded_shape
+    row_height, br, bc = (split0.row_height, split0.block_rows,
+                          split0.block_cols)
+    padded = np.zeros((b, new_h, new_w), dtype=mats.dtype)
+    padded[:, :h, :w] = mats
+    blocks = padded.reshape(b, br, row_height, bc, block_size)
+    blocks = blocks.transpose(0, 1, 3, 2, 4)      # block-major, row-major
+    dt = np.dtype(dtype).newbyteorder("<")
+    raw = np.ascontiguousarray(blocks).astype(dt, copy=False)
+    return raw.view(np.uint8).reshape(b, -1)

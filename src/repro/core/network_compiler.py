@@ -27,15 +27,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .conv_lowering import flatten_tensor, tensor2mat
+from .conv_lowering import flatten_tensor, im2row_batch, tensor2mat
 from .cycle_model import CycleReport, analyze_programs
 from .dram import DramAllocator
 from .hwconfig import VTAConfig, vta_default
 from .layer_compiler import (CompiledLayer, LayerSpec, compile_layer,
                              decode_layer_output, layer_matrices)
-from .layout import matrix_to_binary, should_pad_height
-from .simulator import (SimReport, decode_out_region, make_simulator,
-                        run_instructions)
+from .layout import (batch_matrix_to_binary, matrix_to_binary,
+                     should_pad_height)
+from .simulator import (SimReport, decode_out_region, decode_out_region_batch,
+                        make_simulator, run_instructions)
 
 
 @dataclasses.dataclass
@@ -119,6 +120,135 @@ class NetworkProgram:
                                   self.layers[-1].out_w)
         np.testing.assert_array_equal(out, expected)
         return out, reports
+
+    # ------------------------------------------------------- serving --
+    def plans(self) -> List[object]:
+        """Per-layer compiled instruction plans, cached on the layer
+        programs — the compile-once/serve-many contract: the returned
+        objects are identical across repeated :meth:`serve` calls."""
+        from .fast_simulator import plan_for
+        return [plan_for(layer.program) for layer in self.layers]
+
+    def _stage_layer_input(self, dram_row: np.ndarray, layer: CompiledLayer,
+                           semantic_input: np.ndarray) -> None:
+        """§4.2 stage (ii) for one request: im2row/flatten → pad → split →
+        binarise → written into the layer's INP region of ``dram_row``
+        (a view into the batch stack, so writes land in place)."""
+        A, _, _ = layer_matrices(layer.spec,
+                                 np.asarray(semantic_input, dtype=np.int8))
+        inp_bin, _ = matrix_to_binary(A, self.config.block_size,
+                                      self.config.inp_dtype)
+        region = layer.program.regions["inp"]
+        if len(inp_bin) != region.nbytes:
+            raise ValueError(
+                f"layer {layer.spec.name!r}: staged input is "
+                f"{len(inp_bin)} bytes, INP region holds {region.nbytes} — "
+                f"request shape does not match the compiled geometry")
+        start = region.phys_addr - self.allocator.offset
+        dram_row[start:start + len(inp_bin)] = np.frombuffer(inp_bin,
+                                                             dtype=np.uint8)
+
+    def _stage_layer_input_batch(self, stack: np.ndarray,
+                                 layer: CompiledLayer,
+                                 sems: List[np.ndarray]) -> None:
+        """Batched §4.2 stage (ii): all requests share one lowering
+        geometry, so im2row and the pad/split/binarise pipeline run once
+        over the whole stack (``im2row_batch`` / ``batch_matrix_to_binary``)
+        instead of once per request."""
+        spec = layer.spec
+        arrs = np.stack([np.asarray(s, dtype=np.int8) for s in sems])
+        if spec.kind == "conv":
+            _, _, kh, kw = spec.weights.shape
+            A = im2row_batch(arrs[:, 0], kh, kw, spec.stride, spec.padding)
+        else:
+            A = arrs.reshape(len(sems), 1, -1)       # NCHW flatten / (1, D)
+        raw = batch_matrix_to_binary(A, self.config.block_size,
+                                     self.config.inp_dtype)
+        region = layer.program.regions["inp"]
+        if raw.shape[1] != region.nbytes:
+            raise ValueError(
+                f"layer {layer.spec.name!r}: staged input is "
+                f"{raw.shape[1]} bytes, INP region holds {region.nbytes} — "
+                f"request shape does not match the compiled geometry")
+        start = region.phys_addr - self.allocator.offset
+        stack[:, start:start + raw.shape[1]] = raw
+
+    def _as_image_list(self, images) -> List[np.ndarray]:
+        """Normalise a request batch: a sequence of per-image tensors
+        (each shaped like ``input_tensor``), or one stacked array whose
+        leading axis is the batch — ``(B, C, H, W)`` for a conv-first
+        network with ``(1, C, H, W)`` inputs, ``(B, D)`` for fc-first."""
+        if isinstance(images, np.ndarray):
+            want = self.input_tensor.shape
+            if images.shape[1:] == want:                 # (B,) + full shape
+                return [img for img in images]
+            if images.ndim == len(want) and images.shape[1:] == want[1:]:
+                return [img[None] for img in images]     # batch axis leads
+            raise ValueError(
+                f"cannot interpret stacked input of shape {images.shape} "
+                f"as a batch of {want} images")
+        imgs = list(images)
+        if not imgs:
+            raise ValueError("empty request batch")
+        return [np.asarray(img) for img in imgs]
+
+    def serve_one(self, image: np.ndarray, *, backend: str = "fast"
+                  ) -> np.ndarray:
+        """One inference request: stage the image into layer 0's INP
+        region, then run the chained per-layer VTA executions (Fig. 12)
+        with the host reshaping between.  The per-layer instruction plans
+        are cached on the programs, so requests after the first pay no
+        plan compilation."""
+        image_mem = self.dram_image()
+        self._stage_layer_input(image_mem, self.layers[0], image)
+        semantic = None
+        for k, layer in enumerate(self.layers):
+            sim = make_simulator(self.config, image_mem, backend=backend)
+            run_instructions(sim, layer.program.instructions,
+                             program=layer.program)
+            image_mem = sim.dram
+            out_mat = decode_out_region(layer.program, image_mem)
+            semantic = decode_layer_output(layer, out_mat)
+            if k + 1 < len(self.layers):
+                self._stage_layer_input(image_mem, self.layers[k + 1],
+                                        semantic)
+        return semantic
+
+    def serve(self, images) -> Tuple[np.ndarray, List[SimReport]]:
+        """Compile-once/serve-many batched inference (DESIGN.md §Batching).
+
+        ``images`` is a batch of requests (see :meth:`_as_image_list`).
+        The whole batch moves through the layer chain together: one
+        ``(batch, nbytes)`` DRAM stack, one batched VTA execution per
+        layer over the layer's cached instruction plan, vectorised OUT
+        decoding, and per-request host reshaping between layers.  Outputs
+        are bit-identical to calling :meth:`serve_one` per request — the
+        batch axis only amortises instruction decode and merges the
+        per-instruction array work.
+
+        Returns ``(stacked outputs, per-layer batch-total reports)``: the
+        leading output axis is the request index.
+        """
+        imgs = self._as_image_list(images)
+        from .fast_simulator import BatchFastSimulator, plan_for
+        base = self.dram_image()
+        stack = np.broadcast_to(base, (len(imgs), base.size)).copy()
+        self._stage_layer_input_batch(stack, self.layers[0], imgs)
+        reports: List[SimReport] = []
+        semantics: List[np.ndarray] = []
+        for k, layer in enumerate(self.layers):
+            # the loop owns ``stack`` and re-reads it from ``sim.dram``, so
+            # the simulator's defensive copy is skipped
+            sim = BatchFastSimulator(self.config, stack, copy_dram=False)
+            reports.append(sim.run(layer.program.instructions,
+                                   plan=plan_for(layer.program)))
+            stack = sim.dram
+            out_mats = decode_out_region_batch(layer.program, stack)
+            semantics = [decode_layer_output(layer, m) for m in out_mats]
+            if k + 1 < len(self.layers):
+                self._stage_layer_input_batch(stack, self.layers[k + 1],
+                                              semantics)
+        return np.stack(semantics), reports
 
 
 def calibrate_network_shifts(specs: Sequence[LayerSpec],

@@ -314,7 +314,7 @@ class FunctionalSimulator:
 # Backend selection + program-level drivers
 # ---------------------------------------------------------------------------
 
-BACKENDS = ("oracle", "fast")
+BACKENDS = ("oracle", "fast", "batched")
 
 
 def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
@@ -325,12 +325,18 @@ def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
     correctness anchor.  ``"fast"`` is the vectorised plan-compiling
     interpreter of :mod:`repro.core.fast_simulator`, bit-exact against the
     oracle but executing each instruction as batched numpy ops.
+    ``"batched"`` takes a ``(batch, nbytes)`` DRAM *stack* and executes the
+    stream once over all images (DESIGN.md §Batching), bit-identical to
+    looping ``"oracle"`` over the stack's rows.
     """
     if backend == "oracle":
         return FunctionalSimulator(cfg, dram, trace=trace)
     if backend == "fast":
         from .fast_simulator import FastSimulator
         return FastSimulator(cfg, dram, trace=trace)
+    if backend == "batched":
+        from .fast_simulator import BatchFastSimulator
+        return BatchFastSimulator(cfg, dram, trace=trace)
     raise ValueError(f"unknown simulator backend {backend!r}; "
                      f"expected one of {BACKENDS}")
 
@@ -356,13 +362,47 @@ def run_program(prog: VTAProgram, *, trace: bool = False,
     The decoded matrix is the *unpadded* (M, N) int8 result, reconstructed
     from the OUT region exactly as the §4.2 host-side reshaping does.
     ``backend="fast"`` selects the vectorised interpreter with the plan
-    cached on ``prog``.
+    cached on ``prog``; ``backend="batched"`` routes through the batch
+    engine with a batch of one (uniform dispatch — the real batched entry
+    point is :func:`run_program_batch`).
     """
+    if backend == "batched":
+        outs, report = run_program_batch(prog, batch=1, trace=trace)
+        return outs[0], report
     sim = make_simulator(prog.config, prog.dram_image(),
                          backend=backend, trace=trace)
     report = run_instructions(sim, prog.instructions, program=prog)
     out = decode_out_region(prog, sim.dram)
     return out, report
+
+
+def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
+                      dram_stack: Optional[np.ndarray] = None,
+                      trace: bool = False) -> Tuple[np.ndarray, SimReport]:
+    """Execute one compiled program over a batch of DRAM images.
+
+    Either pass ``dram_stack`` — a ``(batch, nbytes)`` uint8 stack whose
+    rows are per-image DRAM images (typically the program's own image with
+    per-request INP regions staged in) — or just ``batch`` to replicate
+    ``prog.dram_image()``.  The instruction plan is compiled once and
+    cached on ``prog`` (:func:`~repro.core.fast_simulator.plan_for`), so
+    repeated calls pay only the array work.  Returns the stacked decoded
+    ``(batch, M, N)`` results and the batch-total report.
+    """
+    from .fast_simulator import plan_for
+    if dram_stack is None:
+        if batch is None:
+            raise ValueError("pass either dram_stack or batch")
+        image = prog.dram_image()
+        dram_stack = np.broadcast_to(image, (batch, image.size)).copy()
+    elif batch is not None and batch != dram_stack.shape[0]:
+        raise ValueError(
+            f"batch={batch} does not match dram_stack rows "
+            f"{dram_stack.shape[0]}")
+    sim = make_simulator(prog.config, dram_stack, backend="batched",
+                         trace=trace)
+    report = sim.run(prog.instructions, plan=plan_for(prog))
+    return decode_out_region_batch(prog, sim.dram), report
 
 
 def decode_out_region(prog: VTAProgram, dram: np.ndarray) -> np.ndarray:
@@ -382,6 +422,30 @@ def decode_out_region(prog: VTAProgram, dram: np.ndarray) -> np.ndarray:
                                                 meta.block_cols * bs)
     m, n = meta.valid_shape
     return np.ascontiguousarray(full[:m, :n])
+
+
+def decode_out_region_batch(prog: VTAProgram,
+                            dram_stack: np.ndarray) -> np.ndarray:
+    """§4.2 stage (i) over a ``(batch, nbytes)`` DRAM stack → (batch, M, N).
+
+    The per-image decode is pure reshape/transpose, so the batch axis rides
+    along for free — one call replaces ``batch`` :func:`decode_out_region`
+    calls on the serve path."""
+    cfg = prog.config
+    meta = prog.output_meta
+    if meta is None:
+        raise ValueError("program has no output metadata")
+    region = prog.regions["out"]
+    start = region.phys_addr - prog.allocator.offset
+    raw = dram_stack[:, start:start + region.nbytes].view(np.int8)
+    bs = cfg.block_size
+    rh = meta.row_height
+    b = dram_stack.shape[0]
+    blocks = raw.reshape(b, meta.block_rows, meta.block_cols, rh, bs)
+    full = blocks.transpose(0, 1, 3, 2, 4).reshape(
+        b, meta.block_rows * rh, meta.block_cols * bs)
+    m, n = meta.valid_shape
+    return np.ascontiguousarray(full[:, :m, :n])
 
 
 def verify_program(prog: VTAProgram, *, trace: bool = False,
