@@ -1,0 +1,105 @@
+"""resnet_tiny benchmarks — the graph-compiled branching workload
+(DESIGN.md §Graph).
+
+No paper column: the paper's compiler cannot express branching CNNs at
+all, so these rows document what the graph subsystem opens — per-layer
+chunk counts and GeMM loops, the on-VTA residual-add instruction counts,
+and serving throughput (per-image fast loop vs the batched runtime) next
+to the LeNet/CIFAR numbers (EXPERIMENTS.md §Serving).
+
+``artifact()`` returns the same measurements as a JSON-ready dict;
+``benchmarks.run`` writes it to ``BENCH_resnet_tiny.json`` so the perf
+trajectory has machine-readable data points.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import isa
+from repro.core.cycle_model import FPGA_CLOCK_HZ
+
+
+def _network():
+    from repro.models.resnet_tiny import compile_resnet_tiny
+    return compile_resnet_tiny()
+
+
+def _alu_add_insns(prog) -> int:
+    return sum(1 for i in prog.instructions
+               if isinstance(i, isa.AluInsn)
+               and i.alu_opcode == isa.AluOp.ADD and not i.use_imm)
+
+
+def _serve_rates(net, *, requests: int = 8, batch: int = 8):
+    from repro.models.resnet_tiny import synthetic_image
+    imgs = [synthetic_image(200 + r) for r in range(requests)]
+    net.serve_one(imgs[0])                      # warm the plan caches
+    t0 = time.perf_counter()
+    for img in imgs:
+        net.serve_one(img, backend="fast")
+    loop_s = time.perf_counter() - t0
+    net.serve(imgs[:batch])                     # warm batched staging
+    t0 = time.perf_counter()
+    net.serve(imgs[:batch])
+    batched_s = time.perf_counter() - t0
+    return requests / loop_s, batch / batched_s
+
+
+def collect() -> Dict:
+    """One measurement pass → the shared dict behind the CSV rows and the
+    ``BENCH_resnet_tiny.json`` artifact."""
+    t0 = time.perf_counter()
+    net, _graph = _network()
+    compile_s = time.perf_counter() - t0
+    cr = net.cycle_report()
+    loop_rate, batched_rate = _serve_rates(net)
+    return {
+        "workload": "resnet_tiny",
+        "compile_wall_s": round(compile_s, 3),
+        "layers": [
+            {"name": l.spec.name, "chunks": l.n_chunks,
+             "gemm_loops": l.program.gemm_loops(),
+             "residual": bool(l.spec.residual_add),
+             "alu_add_insns": _alu_add_insns(l.program)}
+            for l in net.layers],
+        "residual_joins": sum(1 for l in net.layers if l.spec.residual_add),
+        "gemm_loops_total": net.gemm_loops(),
+        "compute_cycles": cr.total_compute_cycles,
+        "compute_load_cycles": cr.compute_load_cycles,
+        "exec_us_at_650mhz": round(cr.execution_time_s(
+            FPGA_CLOCK_HZ, include_loads=True) * 1e6, 2),
+        "serve_img_per_s_fast_loop": round(loop_rate, 1),
+        "serve_img_per_s_batched@8": round(batched_rate, 1),
+    }
+
+
+def all_tables(data: Dict = None) -> List[Dict]:
+    data = data or collect()
+    rows: List[Dict] = []
+    for layer in data["layers"]:
+        rows.append({"name": f"graph/chunks/{layer['name']}",
+                     "value": layer["chunks"], "paper": None})
+        rows.append({"name": f"graph/gemm_loops/{layer['name']}",
+                     "value": layer["gemm_loops"], "paper": None})
+        if layer["residual"]:
+            rows.append({"name": f"graph/alu_add_insns/{layer['name']}",
+                         "value": layer["alu_add_insns"], "paper": None})
+    rows.append({"name": "graph/residual_joins",
+                 "value": data["residual_joins"], "paper": None})
+    rows.append({"name": "graph/gemm_loops/total",
+                 "value": data["gemm_loops_total"], "paper": None})
+    rows.append({"name": "graph/cycles/total_compute",
+                 "value": data["compute_cycles"], "paper": None})
+    rows.append({"name": "graph/cycles/compute_loads",
+                 "value": data["compute_load_cycles"], "paper": None})
+    rows.append({"name": "graph/exec_us@650MHz",
+                 "value": data["exec_us_at_650mhz"], "paper": None})
+    rows.append({"name": "graph/compile_wall_s",
+                 "value": data["compile_wall_s"], "paper": None})
+    rows.append({"name": "serve/resnet_tiny/fast_loop_img_per_s",
+                 "value": data["serve_img_per_s_fast_loop"], "paper": None})
+    rows.append({"name": "serve/resnet_tiny/batched@8_img_per_s",
+                 "value": data["serve_img_per_s_batched@8"], "paper": None})
+    return rows

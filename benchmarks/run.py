@@ -1,13 +1,18 @@
 """Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One table per paper claim (§5.1 loops, §5.2 cycles, DRAM traffic, compiler
-throughput, simulator throughput) + kernel micro-benches + the roofline
+throughput, simulator throughput) + the graph-compiled resnet_tiny rows
+(``graph/*``, DESIGN.md §Graph) + kernel micro-benches + the roofline
 summary from the latest dry-run sweep.  Output: ``name,value,paper,derived``
-CSV rows, with PASS/DIFF annotations against the paper's numbers.
+CSV rows, with PASS/DIFF annotations against the paper's numbers; the
+resnet_tiny measurements are additionally written to
+``BENCH_resnet_tiny.json`` (a reproducible artifact, gitignored) so the
+perf trajectory has machine-readable data points.
 """
 
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -15,12 +20,13 @@ import sys
 def main() -> None:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
     from benchmarks import (cifar_tables, kernel_bench, lenet_tables,
-                            serving_tables)
+                            resnet_tables, serving_tables)
 
     print("name,value,paper,derived/status")
     failures = 0
-    for row in (lenet_tables.all_tables() + cifar_tables.all_tables()
-                + serving_tables.all_tables()):
+
+    def emit(row) -> None:
+        nonlocal failures
         paper = row.get("paper")
         status = ""
         if paper is not None:
@@ -35,6 +41,17 @@ def main() -> None:
                 status = row.get("note", "") or f"paper={paper}"
         print(f"{row['name']},{row['value']},"
               f"{paper if paper is not None else ''},{status}")
+
+    # The established paper-claim tables print before the newer
+    # collections run, so a failure there cannot swallow them.
+    for row in lenet_tables.all_tables() + cifar_tables.all_tables():
+        emit(row)
+    resnet_data = resnet_tables.collect()
+    pathlib.Path("BENCH_resnet_tiny.json").write_text(
+        json.dumps(resnet_data, indent=2) + "\n")
+    for row in (resnet_tables.all_tables(resnet_data)
+                + serving_tables.all_tables()):
+        emit(row)
 
     for row in kernel_bench.all_tables():
         print(f"{row['name']},{row['value']},,{row.get('derived', '')}")

@@ -16,6 +16,11 @@ post-ops down to a :class:`~repro.core.program.VTAProgram`:
   the compiler rewrites them against the chunk's local ACC window, and the
   chunk boundaries are aligned so that no (dst, src) pair ever straddles
   two chunks;
+* on-VTA residual adds (DESIGN.md §Graph): an :class:`AluResidualOp` in the
+  post-op list merges a second int32 operand — ACC-loaded per chunk beside
+  the result window, its own ``res`` DRAM region — with one factor-form
+  vector-vector ALU ADD (plus an optional scale-equalising SHR), the chunk
+  planner halving the ACC budget so both windows fit;
 * UOP wave streaming (DESIGN.md §3): when a program needs more micro-ops
   than the UOP buffer holds, the uop stream is split into *waves* — each
   wave is a contiguous DRAM run loaded with a compute-module LOAD_UOP right
@@ -39,6 +44,7 @@ import numpy as np
 
 from . import isa
 from .dram import DramAllocator
+from .errors import CompileError
 from .hwconfig import VTAConfig, vta_default
 from .layout import (matrix_padding, matrix_splitting, binarize_blocks,
                      should_pad_height, pad_to_multiple)
@@ -93,7 +99,28 @@ class AluIndexedImmOp:
     indices: Tuple[int, ...]
 
 
-AluSpec = (AluImmOp, AluPairOp, AluIndexedImmOp)
+@dataclasses.dataclass(frozen=True)
+class AluResidualOp:
+    """Vector-vector op against a *second ACC-resident operand* — the
+    on-device residual add of DESIGN.md §Graph.
+
+    The compiler loads the program's ``residual`` matrix (a second int32
+    (M, N) operand, e.g. the skip activation of a ResNet block) into the
+    ACC SRAM *beside* the chunk's result window (sram offset = chunk
+    result size), then emits one factor-form ``AluInsn`` per chunk:
+    ``acc[v] = op(acc[v], acc[res_base + v])`` for every result vector
+    ``v`` — a true two-operand TensorAlu instruction, not a host-side
+    merge.  ``pre_shift > 0`` first applies an SHR immediate to the loaded
+    residual window (scale equalisation across a branch join, planned by
+    the graph requant pass).  Chunk planning halves the ACC budget when a
+    residual operand is present so both windows always fit.
+    """
+
+    op: isa.AluOp = isa.AluOp.ADD
+    pre_shift: int = 0
+
+
+AluSpec = (AluImmOp, AluPairOp, AluIndexedImmOp, AluResidualOp)
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +146,9 @@ class ChunkPlan:
     row_height: int
     alpha_segs: Tuple[Tuple[int, int], ...] = ()
     beta_segs: Tuple[Tuple[int, int], ...] = ()
+    # ACC windows resident per chunk: 1 normally, 2 when the program holds
+    # a residual operand beside the result (AluResidualOp).
+    acc_copies: int = 1
 
     @property
     def n_chunks(self) -> int:
@@ -157,10 +187,11 @@ def _segment(total: int, chunk: int, groups: Sequence[Tuple[int, int]] = ()
                 nxt = b
                 break
         if nxt <= cur:
-            raise ValueError(
+            raise CompileError(
                 f"ALU pair group spans more than one SRAM chunk (chunk "
                 f"capacity {chunk} at offset {cur} of {total}); shrink the "
-                f"pair groups or use a larger accumulator buffer")
+                f"pair groups or use a larger accumulator buffer",
+                constraint="alu-pair-group-chunk")
         segs.append((cur, nxt - cur))
         cur = nxt
     return tuple(segs)
@@ -169,26 +200,31 @@ def _segment(total: int, chunk: int, groups: Sequence[Tuple[int, int]] = ()
 def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
                 row_height: int, *,
                 row_groups: Sequence[Tuple[int, int]] = (),
-                col_groups: Sequence[Tuple[int, int]] = ()) -> ChunkPlan:
+                col_groups: Sequence[Tuple[int, int]] = (),
+                acc_copies: int = 1) -> ChunkPlan:
     """Greedy deterministic tiling honouring every buffer capacity.
 
     ``row_groups``/``col_groups`` are inclusive block-row/block-col
     intervals that must not straddle a chunk boundary — derived from pair
-    ALU programs (both ends of a pair must share one ACC window)."""
+    ALU programs (both ends of a pair must share one ACC window).
+    ``acc_copies=2`` halves the per-chunk ACC budget so a residual operand
+    window (:class:`AluResidualOp`) fits beside the result window."""
+    acc_budget = cfg.acc_buff_vectors // acc_copies
     lam_c = max(1, min(lam, cfg.wgt_buff_matrices,
                        cfg.inp_buff_vectors // row_height))
     beta_c = max(1, min(beta, cfg.wgt_buff_matrices // lam_c,
-                        cfg.acc_buff_vectors // row_height,
+                        acc_budget // row_height,
                         cfg.out_buff_vectors // row_height,
                         cfg.uop_buff_entries - 1))
     alpha_c = max(1, min(alpha,
                          cfg.inp_buff_vectors // (row_height * lam_c),
-                         cfg.acc_buff_vectors // (row_height * beta_c),
+                         acc_budget // (row_height * beta_c),
                          cfg.out_buff_vectors // (row_height * beta_c),
                          (cfg.uop_buff_entries - 1) // beta_c))
     plan = ChunkPlan(alpha, lam, beta, alpha_c, lam_c, beta_c, row_height,
                      alpha_segs=_segment(alpha, alpha_c, row_groups),
-                     beta_segs=_segment(beta, beta_c, col_groups))
+                     beta_segs=_segment(beta, beta_c, col_groups),
+                     acc_copies=acc_copies)
     _validate_plan(cfg, plan)
     return plan
 
@@ -196,7 +232,8 @@ def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
 def _validate_plan(cfg: VTAConfig, p: ChunkPlan) -> None:
     assert p.alpha_c * p.row_height * p.lam_c <= cfg.inp_buff_vectors
     assert p.lam_c * p.beta_c <= cfg.wgt_buff_matrices
-    assert p.alpha_c * p.row_height * p.beta_c <= cfg.acc_buff_vectors
+    assert (p.alpha_c * p.row_height * p.beta_c * p.acc_copies
+            <= cfg.acc_buff_vectors)
     assert p.alpha_c * p.row_height * p.beta_c <= cfg.out_buff_vectors
     assert p.alpha_c * p.beta_c + 1 <= cfg.uop_buff_entries
     assert all(a <= p.alpha_c for _, a in p.alpha_segs)
@@ -244,7 +281,8 @@ def _alu_chunk_groups(alu_ops: Sequence, beta: int, row_height: int
 
 def reference_result(A: np.ndarray, B: np.ndarray, X: Optional[np.ndarray],
                      alu_ops: Sequence, cfg: VTAConfig,
-                     row_height: Optional[int] = None
+                     row_height: Optional[int] = None,
+                     residual: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Bit-accurate reference: returns ``(acc_int32, out_int8)`` on the
     *padded* geometry (block-major semantics are layout-only)."""
@@ -263,6 +301,12 @@ def reference_result(A: np.ndarray, B: np.ndarray, X: Optional[np.ndarray],
 
     beta = Bp.shape[1] // bs
     vec = _matrix_to_vectors(acc, bs, row_height)   # (n_vec, bs) block-major
+    res_vec = None
+    if residual is not None:
+        Rp = np.zeros(acc.shape, dtype=np.int32)
+        Rp[:residual.shape[0], :residual.shape[1]] = \
+            residual.astype(np.int32)
+        res_vec = _matrix_to_vectors(Rp, bs, row_height)
     for spec in alu_ops:
         if isinstance(spec, AluImmOp):
             vec = _alu_apply(vec, spec.op, spec.imm, np.arange(len(vec)))
@@ -271,6 +315,18 @@ def reference_result(A: np.ndarray, B: np.ndarray, X: Optional[np.ndarray],
         elif isinstance(spec, AluPairOp):
             for dst, src in spec.pairs:
                 vec = _alu_pair(vec, spec.op, dst, src)
+        elif isinstance(spec, AluResidualOp):
+            if res_vec is None:
+                raise CompileError(
+                    "AluResidualOp requires a residual operand",
+                    constraint="residual-operand-missing")
+            # Mirror the device: the residual window is ACC-loaded, an
+            # optional SHR immediate equalises its scale, then the
+            # vector-vector op merges it into every result vector.
+            r = res_vec.astype(np.int64)
+            if spec.pre_shift:
+                r = _wrap_int32(r >> spec.pre_shift).astype(np.int64)
+            vec = _alu_residual(vec, spec.op, r)
         else:
             raise TypeError(spec)
     acc = _vectors_to_matrix(vec, acc.shape, bs, row_height)
@@ -296,6 +352,22 @@ def _alu_apply(vec, op, imm, idx):
         sel = sel >> imm
     vec[idx] = _wrap_int32(sel)
     return vec
+
+
+def _alu_residual(vec, op, res64):
+    """Whole-result vector-vector op against the residual window."""
+    a = vec.astype(np.int64)
+    if op == isa.AluOp.MIN:
+        r = np.minimum(a, res64)
+    elif op == isa.AluOp.MAX:
+        r = np.maximum(a, res64)
+    elif op == isa.AluOp.ADD:
+        r = a + res64
+    elif op == isa.AluOp.SHR:
+        r = a >> (res64 & 31)
+    else:
+        raise ValueError(op)
+    return _wrap_int32(r)
 
 
 def _alu_pair(vec, op, dst, src):
@@ -337,6 +409,7 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
                    X: Optional[np.ndarray] = None,
                    bias: Optional[np.ndarray] = None,
                    alu_ops: Sequence = (),
+                   residual: Optional[np.ndarray] = None,
                    cfg: Optional[VTAConfig] = None,
                    name: str = "matmul",
                    dram_offset: int = 0,
@@ -346,9 +419,15 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     ``A`` int8 (M,K); ``B`` int8 (K,N); ``X`` int32 (M,N) accumulator preload
     or ``bias`` int32 (N,) broadcast over rows (the paper's C = A×B + X form,
     §2.3).  ``alu_ops`` is an ordered list of AluImmOp / AluPairOp /
-    AluIndexedImmOp; indexed/pair programs work on multi-chunk results (the
-    uops are rewritten against each chunk's local ACC window) and may exceed
-    the UOP buffer (the compiler streams them in LOAD_UOP waves).
+    AluIndexedImmOp / AluResidualOp; indexed/pair programs work on
+    multi-chunk results (the uops are rewritten against each chunk's local
+    ACC window) and may exceed the UOP buffer (the compiler streams them in
+    LOAD_UOP waves).
+
+    ``residual`` — a second int32 (M, N) operand merged *on the VTA* by an
+    :class:`AluResidualOp` in ``alu_ops`` (the residual-add lowering,
+    DESIGN.md §Graph): it is placed in its own ``res`` DRAM region and
+    ACC-loaded beside each chunk's result window.
 
     ``allocator`` — pass a shared :class:`DramAllocator` to place several
     programs (network layers, §4.2) in one DRAM region; region names are
@@ -357,15 +436,33 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     cfg = cfg or vta_default()
     bs = cfg.block_size
     if A.ndim != 2 or B.ndim != 2 or A.shape[1] != B.shape[0]:
-        raise ValueError(f"incompatible shapes {A.shape} @ {B.shape}")
+        raise CompileError(
+            f"incompatible GEMM shapes {A.shape} @ {B.shape}",
+            layer=name, constraint="gemm-shape")
     A = np.asarray(A, dtype=np.int8)
     B = np.asarray(B, dtype=np.int8)
     if bias is not None and X is not None:
-        raise ValueError("pass either X or bias, not both")
+        raise CompileError("pass either X or bias, not both", layer=name,
+                           constraint="bias-xor-preload")
     M, K = A.shape
     N = B.shape[1]
     if bias is not None:
         X = np.broadcast_to(np.asarray(bias, dtype=np.int32), (M, N)).copy()
+
+    n_residual_ops = sum(isinstance(s, AluResidualOp) for s in alu_ops)
+    if n_residual_ops > 1:
+        raise CompileError("at most one AluResidualOp per program",
+                           layer=name, constraint="residual-single-op")
+    if (residual is not None) != (n_residual_ops == 1):
+        raise CompileError(
+            "a residual operand and an AluResidualOp must come together",
+            layer=name, constraint="residual-operand-op-pairing")
+    if residual is not None:
+        residual = np.asarray(residual, dtype=np.int32)
+        if residual.shape != (M, N):
+            raise CompileError(
+                f"residual operand shape {residual.shape} != result "
+                f"shape {(M, N)}", layer=name, constraint="residual-shape")
 
     # ---------------- data definition (§3.2) ----------------
     pad_h = should_pad_height(A)
@@ -388,6 +485,13 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
         x_split = matrix_splitting(Xp, bs)
         acc_bin = binarize_blocks(x_split, cfg.acc_dtype)
 
+    has_res = residual is not None
+    if has_res:
+        Rp = np.zeros((alpha * row_height, beta * bs), dtype=np.int32)
+        Rp[:M, :N] = residual
+        r_split = matrix_splitting(Rp, bs)
+        res_bin = binarize_blocks(r_split, cfg.acc_dtype)
+
     # ---------------- chunk plan ----------------
     n_result_vec = alpha * beta * row_height
     for spec in alu_ops:
@@ -399,12 +503,14 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
             idxs = ()
         for v in idxs:
             if not 0 <= v < n_result_vec:
-                raise ValueError(
-                    f"ALU index {v} outside the {n_result_vec}-vector result")
+                raise CompileError(
+                    f"ALU index {v} outside the {n_result_vec}-vector result",
+                    layer=name, constraint="alu-index-range")
 
     row_groups, col_groups = _alu_chunk_groups(alu_ops, beta, row_height)
     plan = plan_chunks(cfg, alpha, lam, beta, row_height,
-                       row_groups=row_groups, col_groups=col_groups)
+                       row_groups=row_groups, col_groups=col_groups,
+                       acc_copies=2 if residual is not None else 1)
     lam_segs = list(_ranges(lam, plan.lam_c))
     chunk_list = [(i0, a_c, j0, b_c)
                   for i0, a_c in plan.alpha_segs
@@ -422,6 +528,16 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
         local = lambda v: _chunk_local_index(v, i0, a_c, j0, b_c, beta,
                                              row_height)
         out: List[isa.Uop] = []
+        if isinstance(spec, AluResidualOp):
+            # The residual window sits right after the chunk's result
+            # window in ACC SRAM.  One uop drives the whole factor-form
+            # lattice: optionally a pre-shift SHR over the window itself,
+            # then the vector-vector op (dst = result, src = window).
+            base = a_c * b_c * row_height
+            if spec.pre_shift:
+                out.append(isa.Uop(acc_idx=base, inp_idx=base, wgt_idx=0))
+            out.append(isa.Uop(acc_idx=0, inp_idx=base, wgt_idx=0))
+            return out
         if isinstance(spec, AluIndexedImmOp):
             for v in spec.indices:
                 lv = local(v)
@@ -550,6 +666,9 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     if has_x:
         regions["acc"] = alloc.alloc(pfx + "acc", "acc", cfg.acc_elem_bytes,
                                      n_res_vec)
+    if has_res:
+        regions["res"] = alloc.alloc(pfx + "res", "acc", cfg.acc_elem_bytes,
+                                     n_res_vec)
     regions["out"] = alloc.alloc(pfx + "out", "out", cfg.out_elem_bytes,
                                  n_res_vec)
     regions["uop"] = alloc.alloc(pfx + "uop", "uop", cfg.uop_elem_bytes,
@@ -561,6 +680,8 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     prog.set_segment("wgt", wgt_bin)
     if has_x:
         prog.set_segment("acc", acc_bin)
+    if has_res:
+        prog.set_segment("res", res_bin)
 
     log = lambda r: regions[r].logical_addr(alloc.offset)
     insns: List[object] = []
@@ -648,6 +769,34 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
                     src_factor_out=row_height, src_factor_in=1,
                     use_imm=1, imm=spec.imm))
                 continue
+            if isinstance(spec, AluResidualOp):
+                # Load the chunk's residual window (compute-module LOAD,
+                # same strided geometry as the chunk result) beside the
+                # result window, then run the factor-form lattice over
+                # every result vector: pre-shift SHR first when the scales
+                # need equalising, then the vector-vector op.
+                res_base = a_c * b_c * row_height
+                insns.append(isa.MemInsn(
+                    isa.Opcode.LOAD, isa.MemId.ACC, sram_base=res_base,
+                    dram_base=log("res") + (i0 * beta + j0) * row_height,
+                    y_size=a_c, x_size=b_c * row_height,
+                    x_stride=beta * row_height))
+                pos = 0
+                for (wave, start, count) in use:
+                    _ensure_wave(wave)
+                    for t in range(count):
+                        is_pre = pos == 0 and spec.pre_shift > 0
+                        insns.append(isa.AluInsn(
+                            alu_opcode=(isa.AluOp.SHR if is_pre
+                                        else spec.op),
+                            uop_bgn=start + t, uop_end=start + t + 1,
+                            iter_out=a_c * b_c, iter_in=row_height,
+                            dst_factor_out=row_height, dst_factor_in=1,
+                            src_factor_out=row_height, src_factor_in=1,
+                            use_imm=1 if is_pre else 0,
+                            imm=spec.pre_shift if is_pre else 0))
+                        pos += 1
+                continue
             use_imm = 1 if isinstance(spec, AluIndexedImmOp) else 0
             imm = spec.imm if use_imm else 0
             for (wave, start, count) in use:
@@ -676,7 +825,8 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
 
     # ---------------- expected output (oracle) ----------------
     acc_ref, out_ref = reference_result(A, B, X, alu_ops, cfg,
-                                        row_height=row_height)
+                                        row_height=row_height,
+                                        residual=residual)
     prog.expected_out = out_ref
     prog.output_meta = OutputMeta(block_rows=alpha, block_cols=beta,
                                   row_height=row_height,

@@ -31,10 +31,11 @@ import numpy as np
 
 from .conv_lowering import (ConvGeometry, PoolPlan, avgpool2x2_plan,
                             flatten_tensor, im2row, ker2col, mat2tensor,
-                            maxpool2x2_plan)
+                            maxpool2x2_plan, tensor2mat)
 from .dram import DramAllocator
+from .errors import CompileError
 from .gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
-                            compile_matmul)
+                            AluResidualOp, compile_matmul)
 from .hwconfig import VTAConfig, vta_default
 from .layout import pad_to_multiple, should_pad_height, truncate_int8
 from .program import VTAProgram
@@ -59,6 +60,16 @@ class LayerSpec:
     relu: bool = False
     pool: Optional[str] = None     # None | "avg2x2" | "max2x2"
     requant_shift: Optional[int] = None   # None = choose statically
+    # Residual-add fusion (DESIGN.md §Graph): the layer closes a skip
+    # connection — after the GEMM result is requantised (``requant_shift``)
+    # the skip operand is ACC-loaded and merged on the VTA with an ALU
+    # vector-vector ADD (``residual_pre_shift`` equalises its scale), then
+    # ``relu`` applies *post-add* and ``residual_shift`` requantises the
+    # sum.  ``compile_layer`` must then receive the skip activation via
+    # its ``residual=`` argument.  Pooling cannot fuse with a residual.
+    residual_add: bool = False
+    residual_pre_shift: int = 0
+    residual_shift: Optional[int] = None  # None = choose statically
 
     def out_features(self) -> int:
         return (self.weights.shape[0] if self.kind == "conv"
@@ -79,6 +90,10 @@ class CompiledLayer:
     out_h: Optional[int] = None       # post-pool spatial dims (conv only)
     out_w: Optional[int] = None
     ref_output_matrix: Optional[np.ndarray] = None  # int8 (rows×F) post-reshape
+    # Residual layers: the reference skip operand (int32 (M, N), add-time
+    # scale) and the post-add requant shift actually compiled in.
+    residual_matrix: Optional[np.ndarray] = None
+    residual_shift: Optional[int] = None
 
     @property
     def gemm_loops(self) -> int:
@@ -106,12 +121,20 @@ def pool_plan_for(spec: LayerSpec,
     if spec.pool is None:
         return None
     if geo is None:
-        raise ValueError("pooling requires a conv layer")
+        raise CompileError("pooling requires a conv layer", layer=spec.name,
+                           constraint="pool-needs-conv")
+    if geo.out_h % 2 or geo.out_w % 2:
+        raise CompileError(
+            f"2x2 pooling needs even conv output dims, got "
+            f"{geo.out_h}x{geo.out_w}", layer=spec.name,
+            constraint="pool-even-dims")
     if spec.pool == "avg2x2":
         return avgpool2x2_plan(geo.out_h, geo.out_w)
     if spec.pool == "max2x2":
         return maxpool2x2_plan(geo.out_h, geo.out_w)
-    raise ValueError(f"unsupported pool {spec.pool!r}")
+    raise CompileError(f"unsupported pool kind {spec.pool!r} (expected "
+                       f"'avg2x2' or 'max2x2')", layer=spec.name,
+                       constraint="pool-kind")
 
 
 def pool_divisor(pool_plan: Optional[PoolPlan]) -> int:
@@ -131,28 +154,68 @@ def choose_requant_shift(acc: np.ndarray, *, already_shifted: int = 0) -> int:
 
 def layer_matrices(spec: LayerSpec, inp: np.ndarray
                    ) -> Tuple[np.ndarray, np.ndarray, Optional[ConvGeometry]]:
-    """Hardware-agnostic stage: tensors → (A, B) matrices (Def. 3)."""
+    """Hardware-agnostic stage: tensors → (A, B) matrices (Def. 3).
+
+    Every unsupported shape/stride raises a typed :class:`CompileError`
+    naming the layer and the violated constraint (certification-style
+    traceability — never a bare assert)."""
     if spec.kind == "conv":
         if inp.ndim != 4:
-            raise ValueError(f"conv layer {spec.name!r} needs a 4-D tensor")
+            raise CompileError(
+                f"conv input must be a (1, C, H, W) tensor, got shape "
+                f"{inp.shape}", layer=spec.name, constraint="conv-input-rank")
+        if inp.shape[0] != 1:
+            raise CompileError(
+                f"conv compiles per-image (batch axis must be 1), got "
+                f"batch {inp.shape[0]}; batching happens at serve time",
+                layer=spec.name, constraint="conv-batch-one")
+        if spec.weights.ndim != 4:
+            raise CompileError(
+                f"conv weights must be (F, C, kh, kw), got shape "
+                f"{spec.weights.shape}", layer=spec.name,
+                constraint="conv-weight-rank")
+        if spec.stride < 1:
+            raise CompileError(f"stride must be >= 1, got {spec.stride}",
+                               layer=spec.name, constraint="conv-stride")
+        if spec.padding < 0:
+            raise CompileError(f"padding must be >= 0, got {spec.padding}",
+                               layer=spec.name, constraint="conv-padding")
         f, c, kh, kw = spec.weights.shape
         if inp.shape[1] != c:
-            raise ValueError(f"layer {spec.name!r}: channel mismatch "
-                             f"{inp.shape[1]} != {c}")
+            raise CompileError(
+                f"channel mismatch: input has {inp.shape[1]} channels, "
+                f"weights expect {c}", layer=spec.name,
+                constraint="conv-channels")
         geo = ConvGeometry(c, inp.shape[2], inp.shape[3], kh, kw, spec.stride,
                            spec.padding)
+        if geo.out_h <= 0 or geo.out_w <= 0:
+            raise CompileError(
+                f"kernel {kh}x{kw} (stride {spec.stride}, pad "
+                f"{spec.padding}) does not fit the {inp.shape[2]}x"
+                f"{inp.shape[3]} input", layer=spec.name,
+                constraint="conv-kernel-fit")
         A = im2row(inp, kh, kw, spec.stride, spec.padding)
         B = ker2col(spec.weights)
         return A, B, geo
     if spec.kind == "fc":
         A = flatten_tensor(inp) if inp.ndim == 4 else np.asarray(inp)
         if A.ndim != 2:
-            raise ValueError(f"fc layer {spec.name!r} needs a 2-D input")
+            raise CompileError(
+                f"fc input must be 2-D (or a flattenable NCHW tensor), got "
+                f"shape {np.asarray(inp).shape}", layer=spec.name,
+                constraint="fc-input-rank")
         B = np.asarray(spec.weights)
+        if B.ndim != 2:
+            raise CompileError(
+                f"fc weights must be 2-D (D, F), got shape {B.shape}",
+                layer=spec.name, constraint="fc-weight-rank")
         if A.shape[1] != B.shape[0]:
-            raise ValueError(f"layer {spec.name!r}: {A.shape} @ {B.shape}")
+            raise CompileError(
+                f"fc dimension mismatch: {A.shape} @ {B.shape}",
+                layer=spec.name, constraint="fc-shape")
         return A, B, None
-    raise ValueError(f"unknown layer kind {spec.kind!r}")
+    raise CompileError(f"unknown layer kind {spec.kind!r} (expected 'conv' "
+                       f"or 'fc')", layer=spec.name, constraint="layer-kind")
 
 
 def reference_layer_acc(A: np.ndarray, B: np.ndarray,
@@ -179,13 +242,104 @@ def reference_layer_acc(A: np.ndarray, B: np.ndarray,
     return acc
 
 
+def residual_operand_matrix(spec: LayerSpec, residual: np.ndarray,
+                            shape: Tuple[int, int]) -> np.ndarray:
+    """Skip activation (semantic int8 tensor/matrix) → the int32 (M, N)
+    second ACC operand of the layer's residual add.  The single place the
+    conversion lives — compilation and run-time staging both route through
+    it, so the geometries can never drift."""
+    sem = np.asarray(residual)
+    R = tensor2mat(sem.astype(np.int8)) if sem.ndim == 4 else sem
+    if R.ndim != 2 or R.shape != shape:
+        raise CompileError(
+            f"residual operand (shape {sem.shape}) does not match the "
+            f"layer's {shape} result", layer=spec.name,
+            constraint="residual-shape")
+    return R.astype(np.int32)
+
+
+def _compile_residual_layer(spec: LayerSpec, A: np.ndarray, B: np.ndarray,
+                            geo: Optional[ConvGeometry],
+                            residual: Optional[np.ndarray], cfg: VTAConfig,
+                            allocator: Optional[DramAllocator]
+                            ) -> CompiledLayer:
+    """The residual-closing layer (DESIGN.md §Graph): GEMM → SHR(requant)
+    → on-VTA vector-vector ADD with the ACC-loaded skip operand →
+    optional ReLU → SHR(post-add requant)."""
+    if spec.pool is not None:
+        raise CompileError(
+            "pooling cannot fuse with a residual add (downsample with a "
+            "strided conv instead)", layer=spec.name,
+            constraint="residual-no-pool")
+    if residual is None:
+        raise CompileError(
+            "residual_add layer compiled without a residual operand",
+            layer=spec.name, constraint="residual-operand-missing")
+    if spec.residual_pre_shift < 0:
+        raise CompileError(
+            f"residual pre-shift must be >= 0, got "
+            f"{spec.residual_pre_shift}", layer=spec.name,
+            constraint="residual-pre-shift")
+    M, N = A.shape[0], B.shape[1]
+    R = residual_operand_matrix(spec, residual, (M, N))
+
+    acc = A.astype(np.int64) @ B.astype(np.int64)
+    if spec.bias is not None:
+        acc = acc + spec.bias.astype(np.int64)[None, :]
+    s_conv = (spec.requant_shift if spec.requant_shift is not None
+              else choose_requant_shift(acc))
+    t = (acc >> s_conv) + (R.astype(np.int64) >> spec.residual_pre_shift)
+    if spec.relu:
+        t = np.maximum(t, 0)
+    s_add = (spec.residual_shift if spec.residual_shift is not None
+             else choose_requant_shift(t))
+    final = t >> s_add
+    if np.abs(final).max(initial=0) > 127:
+        raise CompileError(
+            f"post-add requant shift {s_add} leaves values outside int8 — "
+            f"increase residual_shift", layer=spec.name,
+            constraint="requant-int8-range")
+
+    alu_ops: List[object] = []
+    if s_conv > 0:
+        alu_ops.append(AluImmOp.shr(s_conv))
+    alu_ops.append(AluResidualOp(isa.AluOp.ADD,
+                                 pre_shift=spec.residual_pre_shift))
+    if spec.relu:
+        alu_ops.append(AluImmOp.relu())
+    if s_add > 0:
+        alu_ops.append(AluImmOp.shr(s_add))
+
+    prog = compile_matmul(A, B, bias=spec.bias, alu_ops=alu_ops, residual=R,
+                          cfg=cfg, name=spec.name, allocator=allocator)
+    out_h = geo.out_h if geo is not None else None
+    out_w = geo.out_w if geo is not None else None
+    return CompiledLayer(spec=spec, program=prog, input_matrix=A,
+                         weight_matrix=B, requant_shift=s_conv,
+                         keep_rows=None, out_h=out_h, out_w=out_w,
+                         ref_output_matrix=truncate_int8(final),
+                         residual_matrix=R, residual_shift=s_add)
+
+
 def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
                   cfg: Optional[VTAConfig] = None,
-                  allocator: Optional[DramAllocator] = None) -> CompiledLayer:
-    """Compile one layer (Fig. 11) down to a :class:`VTAProgram`."""
+                  allocator: Optional[DramAllocator] = None,
+                  residual: Optional[np.ndarray] = None) -> CompiledLayer:
+    """Compile one layer (Fig. 11) down to a :class:`VTAProgram`.
+
+    For residual layers (``spec.residual_add``) pass the skip activation
+    — the semantic int8 output of the earlier layer — as ``residual``; it
+    becomes the program's second ACC operand, merged on the VTA."""
     cfg = cfg or vta_default()
     bs = cfg.block_size
     A, B, geo = layer_matrices(spec, inp)
+    if spec.residual_add:
+        return _compile_residual_layer(spec, A, B, geo, residual, cfg,
+                                       allocator)
+    if residual is not None:
+        raise CompileError(
+            "residual operand passed to a layer without residual_add",
+            layer=spec.name, constraint="residual-unexpected-operand")
     M, K = A.shape
     N = B.shape[1]
 
@@ -199,9 +353,10 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
              else choose_requant_shift(acc_pre_shift, already_shifted=pool_div))
     final = acc_pre_shift >> (pool_div + shift)
     if np.abs(final).max(initial=0) > 127:
-        raise ValueError(
-            f"layer {spec.name!r}: requant shift {shift} leaves values "
-            f"outside int8 — increase requant_shift")
+        raise CompileError(
+            f"requant shift {shift} leaves values outside int8 — increase "
+            f"requant_shift", layer=spec.name,
+            constraint="requant-int8-range")
 
     # ---- ALU program over ACC vectors (block-major indices) ----
     pad_h = should_pad_height(A)

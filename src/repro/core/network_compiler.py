@@ -41,12 +41,32 @@ from .simulator import (SimReport, decode_out_region, decode_out_region_batch,
 
 @dataclasses.dataclass
 class NetworkProgram:
-    """Everything needed to run a compiled network on a VTA."""
+    """Everything needed to run a compiled network on a VTA.
+
+    ``input_sources``/``residual_sources`` generalise the chain to a DAG
+    schedule (graph lowering, DESIGN.md §Graph): layer *k* reads its input
+    from the semantic output of layer ``input_sources[k]`` (``-1`` = the
+    network input) and — when ``residual_sources[k]`` is not None — stages
+    that layer's output as its on-VTA residual operand.  ``None`` for both
+    fields keeps the classic linear chain (layer k feeds layer k+1).
+    """
 
     config: VTAConfig
     allocator: DramAllocator
     layers: List[CompiledLayer]
     input_tensor: np.ndarray
+    input_sources: Optional[List[int]] = None
+    residual_sources: Optional[List[Optional[int]]] = None
+
+    def _sources(self) -> List[int]:
+        if self.input_sources is not None:
+            return self.input_sources
+        return list(range(-1, len(self.layers) - 1))
+
+    def _res_sources(self) -> List[Optional[int]]:
+        if self.residual_sources is not None:
+            return self.residual_sources
+        return [None] * len(self.layers)
 
     # ------------------------------------------------------------------
     def gemm_loops(self) -> int:
@@ -85,28 +105,36 @@ class NetworkProgram:
         """
         image = self.dram_image()
         reports: List[SimReport] = []
-        semantic = None
+        sems: List[np.ndarray] = []
+        srcs, rsrcs = self._sources(), self._res_sources()
         for k, layer in enumerate(self.layers):
+            if k > 0:        # layer 0's INP was placed at compile time
+                sem_in = (self.input_tensor if srcs[k] < 0
+                          else sems[srcs[k]])
+                A, _, _ = layer_matrices(layer.spec,
+                                         np.asarray(sem_in, dtype=np.int8))
+                if check_chaining:
+                    np.testing.assert_array_equal(
+                        A, layer.input_matrix,
+                        err_msg=f"layer {srcs[k]}->{k} reshaping mismatch")
+                inp_bin, _ = matrix_to_binary(
+                    A, self.config.block_size, self.config.inp_dtype)
+                region = layer.program.regions["inp"]
+                start = region.phys_addr - self.allocator.offset
+                image[start:start + len(inp_bin)] = np.frombuffer(
+                    inp_bin, dtype=np.uint8)
+            if rsrcs[k] is not None:
+                sem_res = (self.input_tensor if rsrcs[k] < 0
+                           else sems[rsrcs[k]])
+                self._stage_residual(image, layer, sem_res,
+                                     check=check_chaining)
             sim = make_simulator(self.config, image, backend=backend)
             reports.append(run_instructions(sim, layer.program.instructions,
                                             program=layer.program))
             image = sim.dram   # VTA wrote its OUT region
             out_mat = decode_out_region(layer.program, image)
-            semantic = decode_layer_output(layer, out_mat)
-            if k + 1 < len(self.layers):
-                nxt = self.layers[k + 1]
-                A, _, _ = layer_matrices(nxt.spec, semantic)
-                if check_chaining:
-                    np.testing.assert_array_equal(
-                        A, nxt.input_matrix,
-                        err_msg=f"layer {k}->{k+1} reshaping mismatch")
-                inp_bin, _ = matrix_to_binary(
-                    A, self.config.block_size, self.config.inp_dtype)
-                region = nxt.program.regions["inp"]
-                start = region.phys_addr - self.allocator.offset
-                image[start:start + len(inp_bin)] = np.frombuffer(
-                    inp_bin, dtype=np.uint8)
-        return semantic, reports
+            sems.append(decode_layer_output(layer, out_mat))
+        return sems[-1], reports
 
     def verify(self, *, backend: str = "oracle"
                ) -> Tuple[np.ndarray, List[SimReport]]:
@@ -173,6 +201,48 @@ class NetworkProgram:
         start = region.phys_addr - self.allocator.offset
         stack[:, start:start + raw.shape[1]] = raw
 
+    def _stage_residual(self, dram_row: np.ndarray, layer: CompiledLayer,
+                        semantic: np.ndarray, *, check: bool = False) -> None:
+        """Stage a residual layer's skip operand: semantic int8 activation
+        → int32 (M, N) matrix → ACC-format binary in the layer's ``res``
+        region (the second on-VTA ALU operand, DESIGN.md §Graph)."""
+        from .layer_compiler import residual_operand_matrix
+        R = residual_operand_matrix(layer.spec, semantic,
+                                    layer.residual_matrix.shape)
+        if check:
+            np.testing.assert_array_equal(
+                R, layer.residual_matrix,
+                err_msg=f"layer {layer.spec.name!r}: residual operand "
+                        f"mismatch")
+        raw, _ = matrix_to_binary(R, self.config.block_size,
+                                  self.config.acc_dtype)
+        region = layer.program.regions["res"]
+        if len(raw) != region.nbytes:
+            raise ValueError(
+                f"layer {layer.spec.name!r}: staged residual is "
+                f"{len(raw)} bytes, RES region holds {region.nbytes}")
+        start = region.phys_addr - self.allocator.offset
+        dram_row[start:start + len(raw)] = np.frombuffer(raw, dtype=np.uint8)
+
+    def _stage_residual_batch(self, stack: np.ndarray, layer: CompiledLayer,
+                              sems: List[np.ndarray]) -> None:
+        """Batched residual staging: one geometry, one pad/split/binarise
+        pass over the whole request stack (as `_stage_layer_input_batch`,
+        but into the ``res`` region with ACC-format int32 structures)."""
+        from .layer_compiler import residual_operand_matrix
+        Rs = np.stack([residual_operand_matrix(layer.spec, s,
+                                               layer.residual_matrix.shape)
+                       for s in sems])
+        raw = batch_matrix_to_binary(Rs, self.config.block_size,
+                                     self.config.acc_dtype)
+        region = layer.program.regions["res"]
+        if raw.shape[1] != region.nbytes:
+            raise ValueError(
+                f"layer {layer.spec.name!r}: staged residual is "
+                f"{raw.shape[1]} bytes, RES region holds {region.nbytes}")
+        start = region.phys_addr - self.allocator.offset
+        stack[:, start:start + raw.shape[1]] = raw
+
     def _as_image_list(self, images) -> List[np.ndarray]:
         """Normalise a request batch: a sequence of per-image tensors
         (each shaped like ``input_tensor``), or one stacked array whose
@@ -201,18 +271,22 @@ class NetworkProgram:
         plan compilation."""
         image_mem = self.dram_image()
         self._stage_layer_input(image_mem, self.layers[0], image)
-        semantic = None
+        sems: List[np.ndarray] = []
+        srcs, rsrcs = self._sources(), self._res_sources()
         for k, layer in enumerate(self.layers):
+            if k > 0:
+                sem_in = image if srcs[k] < 0 else sems[srcs[k]]
+                self._stage_layer_input(image_mem, layer, sem_in)
+            if rsrcs[k] is not None:
+                sem_res = image if rsrcs[k] < 0 else sems[rsrcs[k]]
+                self._stage_residual(image_mem, layer, sem_res)
             sim = make_simulator(self.config, image_mem, backend=backend)
             run_instructions(sim, layer.program.instructions,
                              program=layer.program)
             image_mem = sim.dram
             out_mat = decode_out_region(layer.program, image_mem)
-            semantic = decode_layer_output(layer, out_mat)
-            if k + 1 < len(self.layers):
-                self._stage_layer_input(image_mem, self.layers[k + 1],
-                                        semantic)
-        return semantic
+            sems.append(decode_layer_output(layer, out_mat))
+        return sems[-1]
 
     def serve(self, images) -> Tuple[np.ndarray, List[SimReport]]:
         """Compile-once/serve-many batched inference (DESIGN.md §Batching).
@@ -235,8 +309,15 @@ class NetworkProgram:
         stack = np.broadcast_to(base, (len(imgs), base.size)).copy()
         self._stage_layer_input_batch(stack, self.layers[0], imgs)
         reports: List[SimReport] = []
-        semantics: List[np.ndarray] = []
+        all_sems: List[List[np.ndarray]] = []   # per layer, per request
+        srcs, rsrcs = self._sources(), self._res_sources()
         for k, layer in enumerate(self.layers):
+            if k > 0:
+                src_sems = imgs if srcs[k] < 0 else all_sems[srcs[k]]
+                self._stage_layer_input_batch(stack, layer, src_sems)
+            if rsrcs[k] is not None:
+                res_sems = imgs if rsrcs[k] < 0 else all_sems[rsrcs[k]]
+                self._stage_residual_batch(stack, layer, res_sems)
             # the loop owns ``stack`` and re-reads it from ``sim.dram``, so
             # the simulator's defensive copy is skipped
             sim = BatchFastSimulator(self.config, stack, copy_dram=False)
@@ -244,11 +325,9 @@ class NetworkProgram:
                                    plan=plan_for(layer.program)))
             stack = sim.dram
             out_mats = decode_out_region_batch(layer.program, stack)
-            semantics = [decode_layer_output(layer, m) for m in out_mats]
-            if k + 1 < len(self.layers):
-                self._stage_layer_input_batch(stack, self.layers[k + 1],
-                                              semantics)
-        return np.stack(semantics), reports
+            all_sems.append([decode_layer_output(layer, m)
+                             for m in out_mats])
+        return np.stack(all_sems[-1]), reports
 
 
 def calibrate_network_shifts(specs: Sequence[LayerSpec],

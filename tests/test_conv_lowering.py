@@ -6,8 +6,8 @@ pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.conv_lowering import (ConvGeometry, avgpool2x2_plan,
-                                      conv2d_reference, im2row, ker2col,
-                                      mat2tensor, maxpool2x2_plan,
+                                      conv2d_reference, im2row, im2row_batch,
+                                      ker2col, mat2tensor, maxpool2x2_plan,
                                       tensor2mat, flatten_tensor)
 
 
@@ -85,6 +85,33 @@ def test_same_padding_preserves_spatial_dims():
         assert (geo.out_h, geo.out_w) == (32, 32)
     t = np.ones((1, 3, 32, 32), dtype=np.int8)
     assert im2row(t, 5, 5, 1, 2).shape == (1024, 75)
+
+
+@given(b=st.integers(1, 5), c=st.integers(1, 4), h=st.integers(2, 10),
+       w=st.integers(2, 10), kh=st.integers(1, 4), kw=st.integers(1, 4),
+       stride=st.integers(1, 3), pad=st.integers(0, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=80, deadline=None)
+def test_im2row_batch_equals_per_image_loop(b, c, h, w, kh, kw, stride, pad,
+                                            seed):
+    """``im2row_batch`` is elementwise-identical to looping ``im2row``
+    over the images, across random strides / paddings / kernel sizes —
+    the serving path's batched staging can never drift from the
+    single-image lowering (closes the PR 3 coverage gap where only the
+    e2e paths exercised it)."""
+    if kh > h + 2 * pad:
+        kh = h + 2 * pad
+    if kw > w + 2 * pad:
+        kw = w + 2 * pad
+    rng = np.random.default_rng(seed)
+    stack = rng.integers(-128, 128, (b, c, h, w),
+                         dtype=np.int64).astype(np.int8)
+    batched = im2row_batch(stack, kh, kw, stride, pad)
+    for i in range(b):
+        single = im2row(stack[i:i + 1], kh, kw, stride, pad)
+        np.testing.assert_array_equal(batched[i], single)
+    geo = ConvGeometry(c, h, w, kh, kw, stride, pad)
+    assert batched.shape == (b, geo.n_positions, geo.patch_len)
 
 
 def test_maxpool_plan_mirrors_avgpool_geometry():
