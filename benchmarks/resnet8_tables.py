@@ -1,0 +1,95 @@
+"""resnet8 benchmarks — the strided/GAP workload (DESIGN.md
+§Strided-lowering).
+
+No paper column: the paper's compiler has neither stride-2 convolutions
+nor global average pooling, so these rows document what the strided
+lowering opens — per-layer stride/chunk/GeMM-loop schedules, the GAP
+tree-reduction instruction counts, and serving throughput (per-image
+fast loop vs the batched runtime) next to the resnet_tiny numbers
+(EXPERIMENTS.md §Resnet8).
+
+``collect()`` returns the measurements as a JSON-ready dict;
+``benchmarks.run`` writes it to ``BENCH_resnet8.json`` so the perf
+trajectory has machine-readable data points.  Every row name starts
+with ``resnet8/`` so ``benchmarks.run --only resnet8/`` runs exactly
+this table (the CI smoke step).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.resnet_tables import _alu_add_insns, _serve_rates
+from repro.core.cycle_model import FPGA_CLOCK_HZ
+
+
+def _network():
+    from repro.models.resnet8 import compile_resnet8
+    return compile_resnet8()
+
+
+def collect() -> Dict:
+    """One measurement pass → the shared dict behind the CSV rows and the
+    ``BENCH_resnet8.json`` artifact."""
+    t0 = time.perf_counter()
+    net, _graph = _network()
+    compile_s = time.perf_counter() - t0
+    cr = net.cycle_report()
+    from repro.models.resnet8 import synthetic_image
+    loop_rate, batched_rate = _serve_rates(net, synthetic_image)
+    head = [l for l in net.layers if l.spec.pool == "gap"][0]
+    return {
+        "workload": "resnet8",
+        "compile_wall_s": round(compile_s, 3),
+        "layers": [
+            {"name": l.spec.name, "stride": l.spec.stride,
+             "chunks": l.n_chunks, "gemm_loops": l.program.gemm_loops(),
+             "residual": bool(l.spec.residual_add),
+             "alu_add_insns": _alu_add_insns(l.program)}
+            for l in net.layers],
+        "stride2_convs": sum(1 for l in net.layers if l.spec.stride == 2),
+        "residual_joins": sum(1 for l in net.layers if l.spec.residual_add),
+        "gap_tree_rounds": _alu_add_insns(head.program),
+        "gemm_loops_total": net.gemm_loops(),
+        "compute_cycles": cr.total_compute_cycles,
+        "compute_load_cycles": cr.compute_load_cycles,
+        "exec_us_at_650mhz": round(cr.execution_time_s(
+            FPGA_CLOCK_HZ, include_loads=True) * 1e6, 2),
+        "serve_img_per_s_fast_loop": round(loop_rate, 1),
+        "serve_img_per_s_batched@8": round(batched_rate, 1),
+    }
+
+
+def all_tables(data: Dict = None) -> List[Dict]:
+    data = data or collect()
+    rows: List[Dict] = []
+    for layer in data["layers"]:
+        rows.append({"name": f"resnet8/chunks/{layer['name']}",
+                     "value": layer["chunks"], "paper": None})
+        rows.append({"name": f"resnet8/gemm_loops/{layer['name']}",
+                     "value": layer["gemm_loops"], "paper": None})
+        if layer["stride"] == 2:
+            rows.append({"name": f"resnet8/stride/{layer['name']}",
+                         "value": layer["stride"], "paper": None})
+    rows.append({"name": "resnet8/stride2_convs",
+                 "value": data["stride2_convs"], "paper": None})
+    rows.append({"name": "resnet8/residual_joins",
+                 "value": data["residual_joins"], "paper": None})
+    rows.append({"name": "resnet8/gap_tree_rounds",
+                 "value": data["gap_tree_rounds"], "paper": None})
+    rows.append({"name": "resnet8/gemm_loops/total",
+                 "value": data["gemm_loops_total"], "paper": None})
+    rows.append({"name": "resnet8/cycles/total_compute",
+                 "value": data["compute_cycles"], "paper": None})
+    rows.append({"name": "resnet8/cycles/compute_loads",
+                 "value": data["compute_load_cycles"], "paper": None})
+    rows.append({"name": "resnet8/exec_us@650MHz",
+                 "value": data["exec_us_at_650mhz"], "paper": None})
+    rows.append({"name": "resnet8/compile_wall_s",
+                 "value": data["compile_wall_s"], "paper": None})
+    rows.append({"name": "resnet8/serve/fast_loop_img_per_s",
+                 "value": data["serve_img_per_s_fast_loop"], "paper": None})
+    rows.append({"name": "resnet8/serve/batched@8_img_per_s",
+                 "value": data["serve_img_per_s_batched@8"], "paper": None})
+    return rows

@@ -27,14 +27,18 @@ def _network():
 
 
 def _alu_add_insns(prog) -> int:
+    """Vector-vector (non-imm) ALU ADD instructions — the on-VTA residual
+    adds and GAP tree rounds.  Shared with ``resnet8_tables``."""
     return sum(1 for i in prog.instructions
                if isinstance(i, isa.AluInsn)
                and i.alu_opcode == isa.AluOp.ADD and not i.use_imm)
 
 
-def _serve_rates(net, *, requests: int = 8, batch: int = 8):
-    from repro.models.resnet_tiny import synthetic_image
-    imgs = [synthetic_image(200 + r) for r in range(requests)]
+def _serve_rates(net, image_fn, *, requests: int = 8, batch: int = 8):
+    """(fast-loop img/s, batched img/s) for a compiled network;
+    ``image_fn(seed)`` supplies request images.  Shared with
+    ``resnet8_tables``."""
+    imgs = [image_fn(200 + r) for r in range(requests)]
     net.serve_one(imgs[0])                      # warm the plan caches
     t0 = time.perf_counter()
     for img in imgs:
@@ -54,7 +58,8 @@ def collect() -> Dict:
     net, _graph = _network()
     compile_s = time.perf_counter() - t0
     cr = net.cycle_report()
-    loop_rate, batched_rate = _serve_rates(net)
+    from repro.models.resnet_tiny import synthetic_image
+    loop_rate, batched_rate = _serve_rates(net, synthetic_image)
     return {
         "workload": "resnet_tiny",
         "compile_wall_s": round(compile_s, 3),

@@ -2,71 +2,161 @@
 
 One table per paper claim (§5.1 loops, §5.2 cycles, DRAM traffic, compiler
 throughput, simulator throughput) + the graph-compiled resnet_tiny rows
-(``graph/*``, DESIGN.md §Graph) + kernel micro-benches + the roofline
-summary from the latest dry-run sweep.  Output: ``name,value,paper,derived``
-CSV rows, with PASS/DIFF annotations against the paper's numbers; the
-resnet_tiny measurements are additionally written to
-``BENCH_resnet_tiny.json`` (a reproducible artifact, gitignored) so the
-perf trajectory has machine-readable data points.
+(``graph/*``, DESIGN.md §Graph) + the strided/GAP resnet8 rows
+(``resnet8/*``, DESIGN.md §Strided-lowering) + kernel micro-benches + the
+roofline summary from the latest dry-run sweep.  Output:
+``name,value,paper,derived`` CSV rows, with PASS/DIFF annotations against
+the paper's numbers; the resnet_tiny / resnet8 measurements are
+additionally written to ``BENCH_resnet_tiny.json`` / ``BENCH_resnet8.json``
+(reproducible artifacts, gitignored) so the perf trajectory has
+machine-readable data points.
+
+Hardening (the CI contract):
+
+* a section that raises does not silently vanish — it prints an
+  ``<section>/ERROR`` row with the exception and the process exits
+  non-zero, so a broken table can never disappear from the artifacts;
+* ``--only <prefix>`` runs just the sections that can produce rows with
+  that prefix (and filters the printed rows to it) — the CI smoke step
+  runs ``--only resnet8/`` without paying for every other table.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
+import traceback
 
 
-def main() -> None:
+def _lenet_rows():
+    from benchmarks import lenet_tables
+    return lenet_tables.all_tables()
+
+
+def _cifar_rows():
+    from benchmarks import cifar_tables
+    return cifar_tables.all_tables()
+
+
+def _resnet_tiny_rows():
+    from benchmarks import resnet_tables
+    data = resnet_tables.collect()
+    pathlib.Path("BENCH_resnet_tiny.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return resnet_tables.all_tables(data)
+
+
+def _resnet8_rows():
+    from benchmarks import resnet8_tables
+    data = resnet8_tables.collect()
+    pathlib.Path("BENCH_resnet8.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return resnet8_tables.all_tables(data)
+
+
+def _serving_rows():
+    from benchmarks import serving_tables
+    return serving_tables.all_tables()
+
+
+def _kernel_rows():
+    from benchmarks import kernel_bench
+    return [{"name": row["name"], "value": row["value"], "paper": None,
+             "note": row.get("derived", "")}
+            for row in kernel_bench.all_tables()]
+
+
+def _roofline_rows():
+    # roofline summary (prefer the final sweep, fall back to baseline)
+    dry = pathlib.Path("experiments/final")
+    if not (dry.exists() and any(dry.glob("*.json"))):
+        dry = pathlib.Path("experiments/dryrun")
+    if not (dry.exists() and any(dry.glob("*.json"))):
+        return []
+    from benchmarks import roofline
+    cells = roofline.load_all(str(dry))
+    sp = [c for c in cells if c.mesh == "16x16"]
+    return [{"name": f"roofline/{c.arch}/{c.shape}",
+             "value": f"{c.roofline_fraction:.3f}", "paper": None,
+             "note": f"bound={c.dominant}"}
+            for c in sorted(sp, key=lambda c: (c.arch, c.shape))]
+
+
+# (section name, row-name prefixes it can produce, row producer).  The
+# paper-claim tables print first so a failure in a newer collection can
+# never swallow them.
+SECTIONS = (
+    ("lenet", ("gemm_loops/", "cycles/", "dram/", "exec_", "equiv_",
+               "simd_", "compile/", "funcsim/", "sim/"), _lenet_rows),
+    ("cifar", ("cifar/",), _cifar_rows),
+    ("resnet_tiny", ("graph/", "serve/resnet_tiny/"), _resnet_tiny_rows),
+    ("resnet8", ("resnet8/",), _resnet8_rows),
+    ("serving", ("serve/",), _serving_rows),
+    ("kernels", ("kernel/", "pallas/", "xla/", "hlo/"), _kernel_rows),
+    ("roofline", ("roofline/",), _roofline_rows),
+)
+
+# Rows whose paper column must match bit-for-bit (the §5 claims).
+EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles"}
+
+
+def _section_matches(prefixes, only: str) -> bool:
+    """Could this section produce a row starting with ``only``?"""
+    return any(p.startswith(only) or only.startswith(p) for p in prefixes)
+
+
+def main(argv=None) -> None:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks import (cifar_tables, kernel_bench, lenet_tables,
-                            resnet_tables, serving_tables)
+    ap = argparse.ArgumentParser(
+        description="paper-claim benchmark tables (CSV on stdout)")
+    ap.add_argument("--only", metavar="PREFIX", default=None,
+                    help="run only sections producing rows with this "
+                         "name prefix (e.g. resnet8/) and print only "
+                         "matching rows")
+    args = ap.parse_args(argv)
 
     print("name,value,paper,derived/status")
     failures = 0
 
     def emit(row) -> None:
         nonlocal failures
+        if args.only and not row["name"].startswith(args.only):
+            return
         paper = row.get("paper")
         status = ""
         if paper is not None:
-            exact = {"gemm_loops/total", "cycles/tensor_gemm",
-                     "simd_cpu_cycles"}
-            if row["name"] in exact:
+            if row["name"] in EXACT_ROWS:
                 status = "PASS(exact)" if row["value"] == paper else \
                     f"FAIL(expected {paper})"
                 if "FAIL" in status:
                     failures += 1
             else:
                 status = row.get("note", "") or f"paper={paper}"
+        elif row.get("note"):
+            status = row["note"]
         print(f"{row['name']},{row['value']},"
               f"{paper if paper is not None else ''},{status}")
 
-    # The established paper-claim tables print before the newer
-    # collections run, so a failure there cannot swallow them.
-    for row in lenet_tables.all_tables() + cifar_tables.all_tables():
-        emit(row)
-    resnet_data = resnet_tables.collect()
-    pathlib.Path("BENCH_resnet_tiny.json").write_text(
-        json.dumps(resnet_data, indent=2) + "\n")
-    for row in (resnet_tables.all_tables(resnet_data)
-                + serving_tables.all_tables()):
-        emit(row)
+    for name, prefixes, produce in SECTIONS:
+        if args.only and not _section_matches(prefixes, args.only):
+            continue
+        try:
+            rows = produce()
+        except Exception as exc:                    # noqa: BLE001
+            # a failed table must be *visible* in the CSV and fatal to
+            # the run — never silently missing from the artifacts (the
+            # message is flattened so it cannot break the 4-column rows)
+            traceback.print_exc(file=sys.stderr)
+            msg = f"{type(exc).__name__}: {exc}".replace(",", ";")
+            msg = " ".join(msg.split())
+            print(f"{name}/ERROR,{msg},,FAIL(raised)")
+            failures += 1
+            continue
+        for row in rows:
+            emit(row)
 
-    for row in kernel_bench.all_tables():
-        print(f"{row['name']},{row['value']},,{row.get('derived', '')}")
-
-    # roofline summary (prefer the final sweep, fall back to baseline)
-    dry = pathlib.Path("experiments/final")
-    if not (dry.exists() and any(dry.glob("*.json"))):
-        dry = pathlib.Path("experiments/dryrun")
-    if dry.exists() and any(dry.glob("*.json")):
-        from benchmarks import roofline
-        cells = roofline.load_all(str(dry))
-        sp = [c for c in cells if c.mesh == "16x16"]
-        for c in sorted(sp, key=lambda c: (c.arch, c.shape)):
-            print(f"roofline/{c.arch}/{c.shape},"
-                  f"{c.roofline_fraction:.3f},,bound={c.dominant}")
     if failures:
         sys.exit(1)
 

@@ -155,7 +155,7 @@ def conv2d_reference(tensor: np.ndarray, weights: np.ndarray,
 
 @dataclasses.dataclass(frozen=True)
 class PoolPlan:
-    """2×2/stride-2 pooling as a VTA ALU program over ACC vectors.
+    """Pooling / spatial reduction as a VTA ALU program over ACC vectors.
 
     The conv-output matrix has one ACC vector per spatial position (per
     block column; for β > 1 the indices scale by the block geometry —
@@ -163,11 +163,23 @@ class PoolPlan:
     window members into the *first* member's vector (3 ADD pairs), then
     divides by 4 with one SHR-2 (exact for the sum of four int32s in
     range).  ``mode="max"`` reduces the window with 3 MAX pairs and needs
-    no division.  ``keep_rows`` lists the surviving matrix rows, in pooled
-    row-major order — the host-side decode extracts exactly these rows
-    (which is how the paper's layer-1 output is "decoded into a 196×6
-    matrix").  On multi-chunk results the GEMM compiler keeps each window's
-    pairs inside one SRAM chunk (DESIGN.md §3).
+    no division.  ``mode="gap"`` is global average pooling (DESIGN.md
+    §Strided-lowering): a binary tree of ADD pairs folds every spatial
+    position into row 0, then one SHR by ``div_shift = log2(H·W)`` divides
+    exactly — which is why GAP requires a power-of-two position count.
+    ``keep_rows`` lists the surviving matrix rows, in pooled row-major
+    order — the host-side decode extracts exactly these rows (which is how
+    the paper's layer-1 output is "decoded into a 196×6 matrix").  On
+    multi-chunk results the GEMM compiler keeps each window's pairs inside
+    one SRAM chunk (DESIGN.md §3); the GAP tree spans *every* row, so its
+    pair groups pin the whole α range into a single chunk — a result too
+    large for one ACC residency raises at compile time, never wrong bytes.
+
+    ``rounds`` (GAP only) groups ``add_pairs`` into dependency levels of
+    the reduction tree: pairs within one round touch disjoint vectors, so
+    each round lowers to one vectorisable ALU instruction, while pairs in
+    *different* rounds carry the read-after-write chain of the tree.
+    Empty ``rounds`` means all pairs are independent (the 2×2 windows).
     """
 
     add_pairs: Tuple[Tuple[int, int], ...]
@@ -175,7 +187,9 @@ class PoolPlan:
     keep_rows: Tuple[int, ...]
     out_h: int
     out_w: int
-    mode: str = "avg"              # "avg" | "max"
+    mode: str = "avg"              # "avg" | "max" | "gap"
+    div_shift: int = 2             # log2 of the ÷ folded into the requant SHR
+    rounds: Tuple[Tuple[Tuple[int, int], ...], ...] = ()
 
 
 def _pool2x2_windows(in_h: int, in_w: int):
@@ -198,7 +212,7 @@ def avgpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
     """Average-pool 2×2/stride-2: 3 ADD pairs per window + SHR-2 (÷4)."""
     oh, ow, pairs, keep = _pool2x2_windows(in_h, in_w)
     return PoolPlan(add_pairs=pairs, shr_indices=keep, keep_rows=keep,
-                    out_h=oh, out_w=ow, mode="avg")
+                    out_h=oh, out_w=ow, mode="avg", div_shift=2)
 
 
 def maxpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
@@ -206,4 +220,34 @@ def maxpool2x2_plan(in_h: int, in_w: int) -> PoolPlan:
     the ALU MAX pair program of DESIGN.md §3 (YOLO-style downsampling)."""
     oh, ow, pairs, keep = _pool2x2_windows(in_h, in_w)
     return PoolPlan(add_pairs=pairs, shr_indices=keep, keep_rows=keep,
-                    out_h=oh, out_w=ow, mode="max")
+                    out_h=oh, out_w=ow, mode="max", div_shift=0)
+
+
+def global_avgpool_plan(in_h: int, in_w: int) -> PoolPlan:
+    """Global average pooling over an ``in_h × in_w`` map (DESIGN.md
+    §Strided-lowering): a ``log2(H·W)``-round binary tree of ADD pairs
+    reduces every position's ACC vector into row 0, and one SHR by
+    ``log2(H·W)`` turns the sum into the (floor) average — the ResNet/
+    YOLO-NAS classification head, entirely on the TensorAlu.
+
+    Requires a square power-of-two map so the division is exact in a
+    single arithmetic shift; the layer compiler turns violations into
+    typed :class:`~repro.core.errors.CompileError`\\ s.
+    """
+    n = in_h * in_w
+    if in_h != in_w:
+        raise ValueError(f"global avg pool needs a square map, got "
+                         f"{in_h}x{in_w}")
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"global avg pool needs a power-of-two position "
+                         f"count for the SHR division, got {in_h}x{in_w}")
+    rounds: list = []
+    step = 1
+    while step < n:
+        rounds.append(tuple((base, base + step)
+                            for base in range(0, n, 2 * step)))
+        step *= 2
+    flat = tuple(p for rnd in rounds for p in rnd)
+    return PoolPlan(add_pairs=flat, shr_indices=(0,), keep_rows=(0,),
+                    out_h=1, out_w=1, mode="gap",
+                    div_shift=n.bit_length() - 1, rounds=tuple(rounds))

@@ -1,9 +1,11 @@
 """One CNN layer → one VTA program (paper §4.2, Fig. 11).
 
 A *layer* (paper §4.1) = one dense linear operation (convolution — valid or
-zero-padded "same" — or fully connected) + subsequent non-linear operations
-(ReLU on TensorAlu; average pooling as an ALU ADD/SHR program; max pooling
-as an ALU MAX pair program; static power-of-2 requantisation).  Layers
+zero-padded "same", stride 1 or 2 (DESIGN.md §Strided-lowering) — or fully
+connected) + subsequent non-linear operations (ReLU on TensorAlu; average
+pooling as an ALU ADD/SHR program; max pooling as an ALU MAX pair program;
+global average pooling as an ALU ADD-pair tree reduction + one SHR; static
+power-of-2 requantisation).  Layers
 whose matrices exceed the SRAM compile to multi-chunk programs — the GEMM
 compiler re-indexes the pool/requant uops against each chunk's local ACC
 window (DESIGN.md §3), so nothing here is limited to single-chunk results.
@@ -30,8 +32,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .conv_lowering import (ConvGeometry, PoolPlan, avgpool2x2_plan,
-                            flatten_tensor, im2row, ker2col, mat2tensor,
-                            maxpool2x2_plan, tensor2mat)
+                            flatten_tensor, global_avgpool_plan, im2row,
+                            ker2col, mat2tensor, maxpool2x2_plan, tensor2mat)
 from .dram import DramAllocator
 from .errors import CompileError
 from .gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
@@ -58,7 +60,7 @@ class LayerSpec:
     stride: int = 1
     padding: int = 0               # symmetric zero-padding (conv only)
     relu: bool = False
-    pool: Optional[str] = None     # None | "avg2x2" | "max2x2"
+    pool: Optional[str] = None     # None | "avg2x2" | "max2x2" | "gap"
     requant_shift: Optional[int] = None   # None = choose statically
     # Residual-add fusion (DESIGN.md §Graph): the layer closes a skip
     # connection — after the GEMM result is requantised (``requant_shift``)
@@ -123,24 +125,27 @@ def pool_plan_for(spec: LayerSpec,
     if geo is None:
         raise CompileError("pooling requires a conv layer", layer=spec.name,
                            constraint="pool-needs-conv")
-    if geo.out_h % 2 or geo.out_w % 2:
-        raise CompileError(
-            f"2x2 pooling needs even conv output dims, got "
-            f"{geo.out_h}x{geo.out_w}", layer=spec.name,
-            constraint="pool-even-dims")
-    if spec.pool == "avg2x2":
-        return avgpool2x2_plan(geo.out_h, geo.out_w)
-    if spec.pool == "max2x2":
-        return maxpool2x2_plan(geo.out_h, geo.out_w)
+    if spec.pool in ("avg2x2", "max2x2"):
+        if geo.out_h % 2 or geo.out_w % 2:
+            raise CompileError(
+                f"2x2 pooling needs even conv output dims, got "
+                f"{geo.out_h}x{geo.out_w}", layer=spec.name,
+                constraint="pool-even-dims")
+        return (avgpool2x2_plan if spec.pool == "avg2x2"
+                else maxpool2x2_plan)(geo.out_h, geo.out_w)
+    if spec.pool == "gap":
+        check_gap_geometry(geo.out_h, geo.out_w, layer=spec.name)
+        return global_avgpool_plan(geo.out_h, geo.out_w)
     raise CompileError(f"unsupported pool kind {spec.pool!r} (expected "
-                       f"'avg2x2' or 'max2x2')", layer=spec.name,
+                       f"'avg2x2', 'max2x2' or 'gap')", layer=spec.name,
                        constraint="pool-kind")
 
 
 def pool_divisor(pool_plan: Optional[PoolPlan]) -> int:
     """log2 of the pooling division folded into the requant shift
-    (avg pool sums 4 members → ÷4; max pool divides by nothing)."""
-    return 2 if pool_plan is not None and pool_plan.mode == "avg" else 0
+    (avg pool sums 4 members → ÷4; GAP sums H·W → ÷(H·W); max pool
+    divides by nothing)."""
+    return pool_plan.div_shift if pool_plan is not None else 0
 
 
 def choose_requant_shift(acc: np.ndarray, *, already_shifted: int = 0) -> int:
@@ -150,6 +155,47 @@ def choose_requant_shift(acc: np.ndarray, *, already_shifted: int = 0) -> int:
     while (m >> shift) > 127:
         shift += 1
     return shift
+
+
+def check_stride_tiling(geo: ConvGeometry, *, layer: str = "") -> None:
+    """Stride-2 grid-coverage constraint (DESIGN.md §Strided-lowering).
+
+    The strided window grid must reach the last *real* input pixel: the
+    uncovered tail of the padded input is ``(in + 2·pad - k) mod stride``
+    columns/rows wide, and anything beyond the trailing ``pad`` of those
+    is input data the conv would silently ignore — which the compiler
+    refuses (never silent wrong bytes).  Shared by the layer compiler and
+    the graph shape-inference pass so the two front ends cannot drift.
+    """
+    if geo.stride == 1:
+        return
+    for axis, extent, k in (("height", geo.in_h, geo.kh),
+                            ("width", geo.in_w, geo.kw)):
+        leftover = (extent + 2 * geo.pad - k) % geo.stride
+        if leftover > geo.pad:
+            raise CompileError(
+                f"stride-{geo.stride} windows (kernel {k}, pad {geo.pad}) "
+                f"leave the last {leftover} input {axis} position(s) "
+                f"uncovered — pad the input or adjust the kernel so the "
+                f"strided grid lands flush", layer=layer,
+                constraint="conv-stride-tiling")
+
+
+def check_gap_geometry(out_h: int, out_w: int, *, layer: str = "") -> None:
+    """Global-avg-pool map constraints (DESIGN.md §Strided-lowering): the
+    ÷(H·W) must be one exact SHR, so the map must be square with a
+    power-of-two position count.  Shared by the layer compiler and the
+    graph shape-inference pass so the two front ends cannot drift."""
+    if out_h != out_w:
+        raise CompileError(
+            f"global avg pool needs a square map, got {out_h}x{out_w}",
+            layer=layer, constraint="gap-square")
+    n = out_h * out_w
+    if n & (n - 1):
+        raise CompileError(
+            f"global avg pool needs a power-of-two position count for "
+            f"the exact SHR division, got {out_h}x{out_w}",
+            layer=layer, constraint="gap-pow2")
 
 
 def layer_matrices(spec: LayerSpec, inp: np.ndarray
@@ -177,6 +223,11 @@ def layer_matrices(spec: LayerSpec, inp: np.ndarray
         if spec.stride < 1:
             raise CompileError(f"stride must be >= 1, got {spec.stride}",
                                layer=spec.name, constraint="conv-stride")
+        if spec.stride > 2:
+            raise CompileError(
+                f"stride {spec.stride} unsupported — the strided lowering "
+                f"covers strides 1 and 2 (DESIGN.md §Strided-lowering)",
+                layer=spec.name, constraint="conv-stride-max")
         if spec.padding < 0:
             raise CompileError(f"padding must be >= 0, got {spec.padding}",
                                layer=spec.name, constraint="conv-padding")
@@ -194,6 +245,7 @@ def layer_matrices(spec: LayerSpec, inp: np.ndarray
                 f"{spec.padding}) does not fit the {inp.shape[2]}x"
                 f"{inp.shape[3]} input", layer=spec.name,
                 constraint="conv-kernel-fit")
+        check_stride_tiling(geo, layer=spec.name)
         A = im2row(inp, kh, kw, spec.stride, spec.padding)
         B = ker2col(spec.weights)
         return A, B, geo
@@ -229,6 +281,9 @@ def reference_layer_acc(A: np.ndarray, B: np.ndarray,
     if relu:
         acc = np.maximum(acc, 0)
     if pool_plan is not None:
+        if pool_plan.mode == "gap":
+            # every spatial position folds into row 0 (÷ in the requant)
+            return acc.sum(axis=0, keepdims=True)
         pooled = np.zeros((len(pool_plan.keep_rows), acc.shape[1]),
                           dtype=np.int64)
         for r, base in enumerate(pool_plan.keep_rows):
@@ -366,13 +421,19 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
     if spec.relu:
         alu_ops.append(AluImmOp.relu())
     if pool_plan is not None:
-        pairs = []
-        for dst, src in pool_plan.add_pairs:
-            for j in range(beta):
-                pairs.append((_vec_index(dst, j, beta, row_height),
-                              _vec_index(src, j, beta, row_height)))
         pool_op = isa.AluOp.MAX if pool_plan.mode == "max" else isa.AluOp.ADD
-        alu_ops.append(AluPairOp(pool_op, tuple(pairs)))
+        # One AluPairOp per dependency level: 2×2 windows are one flat
+        # independent set; the GAP tree emits one op per round so every
+        # instruction's (dst, src) lattice stays disjoint (vectorisable)
+        # while the read-after-write chain lives *between* instructions.
+        rounds = pool_plan.rounds or (pool_plan.add_pairs,)
+        for round_pairs in rounds:
+            pairs = []
+            for dst, src in round_pairs:
+                for j in range(beta):
+                    pairs.append((_vec_index(dst, j, beta, row_height),
+                                  _vec_index(src, j, beta, row_height)))
+            alu_ops.append(AluPairOp(pool_op, tuple(pairs)))
         total_shift = pool_div + shift
         if total_shift > 0:
             idx = []

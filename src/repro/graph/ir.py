@@ -8,11 +8,15 @@ of the tensor value it produces (values are explicit — every edge is a
 certifies the whole structure is a DAG before any pass runs):
 
     input(shape)                 — a graph input (int8 activation)
-    conv(x; W, b, stride, pad)   — dense linear (weights (F, C, kh, kw))
+    conv(x; W, b, stride, pad)   — dense linear (weights (F, C, kh, kw));
+                                   stride 2 downsamples (§Strided-lowering)
     fc(x; W, b)                  — dense linear (weights (D, F))
     relu(x)                      — MAX(x, 0)
     pool(x; "max2x2"|"avg2x2")   — 2×2/stride-2 window; avg produces the
                                    window *sum* (÷4 lives in the requant)
+    global_avg_pool(x)           — (1,F,H,W) → (1,F,1,1) spatial *sum*
+                                   (÷(H·W) lives in the requant; needs a
+                                   square power-of-two map)
     requant(x; shift)            — arithmetic right shift (None = planned)
     add(a, b)                    — the residual join (+ planned pre-shifts)
     flatten(x)                   — NCHW → (1, C·H·W)
@@ -41,7 +45,7 @@ from repro.core.errors import CompileError
 # kind -> number of value inputs
 NODE_ARITY = {
     "input": 0, "conv": 1, "fc": 1, "relu": 1, "pool": 1,
-    "requant": 1, "add": 2, "flatten": 1,
+    "global_avg_pool": 1, "requant": 1, "add": 2, "flatten": 1,
 }
 POOL_MODES = ("max2x2", "avg2x2")
 
@@ -171,6 +175,11 @@ def _verify_attrs(node: Node) -> None:
         if node.stride < 1:
             raise CompileError(f"stride must be >= 1, got {node.stride}",
                                layer=node.name, constraint="conv-stride")
+        if node.stride > 2:
+            raise CompileError(
+                f"stride {node.stride} unsupported — the strided lowering "
+                f"covers strides 1 and 2 (DESIGN.md §Strided-lowering)",
+                layer=node.name, constraint="conv-stride-max")
         if node.padding < 0:
             raise CompileError(f"padding must be >= 0, got {node.padding}",
                                layer=node.name, constraint="conv-padding")
@@ -242,6 +251,9 @@ class GraphBuilder:
 
     def pool(self, name: str, x: str, mode: str) -> str:
         return self._add(Node(name, "pool", (x,), mode=mode))
+
+    def global_avg_pool(self, name: str, x: str) -> str:
+        return self._add(Node(name, "global_avg_pool", (x,)))
 
     def requant(self, name: str, x: str,
                 shift: Optional[int] = None) -> str:

@@ -31,7 +31,9 @@ import numpy as np
 from repro.core.conv_lowering import (ConvGeometry, im2row, ker2col,
                                       mat2tensor)
 from repro.core.errors import CompileError
-from repro.core.layer_compiler import choose_requant_shift
+from repro.core.layer_compiler import (check_gap_geometry,
+                                       check_stride_tiling,
+                                       choose_requant_shift)
 
 from .ir import Graph, Node
 
@@ -79,6 +81,7 @@ def _node_shape(node: Node, ins: List[Tuple[int, ...]]) -> Tuple[int, ...]:
                 f"kernel {kh}x{kw} (stride {node.stride}, pad "
                 f"{node.padding}) does not fit the {s[2]}x{s[3]} input",
                 layer=node.name, constraint="conv-kernel-fit")
+        check_stride_tiling(geo, layer=node.name)
         return (1, f, geo.out_h, geo.out_w)
     if node.kind == "fc":
         s = ins[0]
@@ -103,6 +106,13 @@ def _node_shape(node: Node, ins: List[Tuple[int, ...]]) -> Tuple[int, ...]:
                 f"2x2 pooling needs even spatial dims, got {s[2]}x{s[3]}",
                 layer=node.name, constraint="pool-even-dims")
         return (s[0], s[1], s[2] // 2, s[3] // 2)
+    if node.kind == "global_avg_pool":
+        s = ins[0]
+        if len(s) != 4:
+            raise CompileError(f"global_avg_pool input must be 4-D, got {s}",
+                               layer=node.name, constraint="pool-input-rank")
+        check_gap_geometry(s[2], s[3], layer=node.name)
+        return (s[0], s[1], 1, 1)
     if node.kind == "add":
         if ins[0] != ins[1]:
             raise CompileError(
@@ -192,6 +202,9 @@ def _eval_node(node: Node, ins: List[np.ndarray], refs: Tuple[str, ...],
         if node.mode == "max2x2":
             return np.maximum(np.maximum(q[0], q[1]), np.maximum(q[2], q[3]))
         return q[0] + q[1] + q[2] + q[3]          # avg = sum; ÷4 in requant
+    if node.kind == "global_avg_pool":
+        # spatial *sum*; the ÷(H·W) SHR lives in the following requant
+        return ins[0].sum(axis=(2, 3), keepdims=True)
     if node.kind == "requant":
         if node.shift is None:
             raise CompileError("requant shift unplanned — run plan_requant",
@@ -252,7 +265,7 @@ def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
     if len(inputs) != 1:
         raise CompileError("plan_requant expects a single-input graph",
                            constraint="graph-feed")
-    infer_shapes(graph)                         # shape invariant first
+    shapes = infer_shapes(graph)                # shape invariant first
     vals: Dict[str, List[np.ndarray]] = {}
     exps: Dict[str, int] = {}
     shifts: Dict[str, int] = {}
@@ -266,8 +279,7 @@ def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
                 m = max(int(np.abs(v).max(initial=0))
                         for v in vals[refs[0]])
                 shift = choose_requant_shift(np.asarray([m])) + margin
-                if _follows_avg_pool(graph, node):
-                    shift = max(shift, AVG_POOL_DIV)
+                shift = max(shift, _pool_floor(graph, node, shapes))
                 node.shift = shift
             shifts[name] = node.shift
             exps[name] = exps[refs[0]] - node.shift
@@ -305,14 +317,28 @@ def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
                 exps[name] = exps[refs[0]] + node.weight_exp
             elif node.kind == "pool" and node.mode == "avg2x2":
                 exps[name] = exps[refs[0]] + AVG_POOL_DIV
+            elif node.kind == "global_avg_pool":
+                exps[name] = exps[refs[0]] + _gap_div(shapes[refs[0]])
             else:
                 exps[name] = exps[refs[0]]
     return RequantPlan(shifts=shifts, pre_shifts=pre_shifts, exps=exps)
 
 
-def _follows_avg_pool(graph: Graph, node: Node) -> bool:
-    return graph.node(node.inputs[0]).kind == "pool" and \
-        graph.node(node.inputs[0]).mode == "avg2x2"
+def _gap_div(in_shape: Tuple[int, ...]) -> int:
+    """log2 of a GAP node's spatial position count (the ÷(H·W) SHR)."""
+    return (in_shape[2] * in_shape[3]).bit_length() - 1
+
+
+def _pool_floor(graph: Graph, requant: Node,
+                shapes: Dict[str, Tuple[int, ...]]) -> int:
+    """Minimum shift of a requant node: the device folds the producing
+    pool's division (avg ÷4, GAP ÷(H·W)) into the same SHR."""
+    producer = graph.node(requant.inputs[0])
+    if producer.kind == "pool" and producer.mode == "avg2x2":
+        return AVG_POOL_DIV
+    if producer.kind == "global_avg_pool":
+        return _gap_div(shapes[producer.inputs[0]])
+    return 0
 
 
 # ---------------------------------------------------------------------------
@@ -351,13 +377,14 @@ def linearize(graph: Graph) -> List[Step]:
 
     Fusable patterns (single-consumer chains off a dense-linear node):
 
-        conv → [relu] → [pool] → requant                       (linear)
+        conv → [relu] → [pool|global_avg_pool] → requant       (linear)
         fc   → [relu] → requant                                (linear)
         conv|fc → requant → add(·, skip) → [relu] → requant    (residual)
 
     plus ``flatten`` folded into the fc that consumes it.  Anything else
     raises :class:`CompileError`.  Requant shifts must be planned first.
     """
+    shapes = infer_shapes(graph)
     cons = graph.consumers()
     materialized = set(graph.input_names)
     covered = set(graph.input_names)
@@ -408,12 +435,18 @@ def linearize(graph: Graph) -> List[Step]:
             chain.append(nxt.name)
             cur = nxt.name
             nxt = graph.node(single(cur, "relu result must fuse"))
-        if nxt.kind == "pool":
+        pool_div = 0
+        if nxt.kind in ("pool", "global_avg_pool"):
             if node.kind == "fc":
                 raise CompileError("pooling requires a conv layer",
                                    layer=nxt.name,
                                    constraint="pool-needs-conv")
-            pool = nxt.mode
+            if nxt.kind == "global_avg_pool":
+                pool = "gap"
+                pool_div = _gap_div(shapes[nxt.inputs[0]])
+            else:
+                pool = nxt.mode
+                pool_div = AVG_POOL_DIV if pool == "avg2x2" else 0
             chain.append(nxt.name)
             cur = nxt.name
             nxt = graph.node(single(cur, "pool result must fuse"))
@@ -425,12 +458,13 @@ def linearize(graph: Graph) -> List[Step]:
         q = nxt
         chain.append(q.name)
         q_shift = shift_of(q.name)
-        pool_div = AVG_POOL_DIV if pool == "avg2x2" else 0
         if q_shift < pool_div:
             raise CompileError(
-                f"requant after avg-pool must shift by >= {pool_div} "
-                f"(the fused ÷4), got {q_shift}", layer=q.name,
-                constraint="avg-pool-min-shift")
+                f"requant after a pooled reduction must shift by >= "
+                f"{pool_div} (the fused division), got {q_shift}",
+                layer=q.name,
+                constraint="avg-pool-min-shift" if pool != "gap"
+                else "gap-min-shift")
 
         # ---- residual continuation: requant feeding exactly one add
         # whose other operand is already materialized ----

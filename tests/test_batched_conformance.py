@@ -10,9 +10,10 @@ report counters (batch totals = sums of the per-image oracle reports).
 
 Coverage: random ``compile_matmul`` programs with random batch sizes
 (1–16), multi-chunk plans, LOAD_UOP wave streaming, padded-conv/max-pool
-layer programs, and handcrafted streams whose UOP/WGT DRAM regions differ
-*per batch row* (driving the non-uniform general paths the serving
-workload never hits).
+layer programs, stride-2 downsampling convs and global-avg-pool tree
+reductions (DESIGN.md §Strided-lowering), and handcrafted streams whose
+UOP/WGT DRAM regions differ *per batch row* (driving the non-uniform
+general paths the serving workload never hits).
 
 The seeded fuzz below is hypothesis-free (tier-1 floor); an equivalent
 hypothesis property runs when the optional dependency is installed.
@@ -206,6 +207,63 @@ def test_padded_conv_and_pool_pairs_batched():
         assert layer.n_chunks > 1
         prog = layer.program
         stack = varied_stack(prog, rng, 5)
+        assert_batch_matches_oracle_loop(prog.config, prog.instructions,
+                                         stack, plan=plan_for(prog))
+
+
+def test_fuzz_strided_conv_programs_batched():
+    """Stride-2 downsampling convs (k3/s2/p1 halving and k2/s2 projection
+    geometry, DESIGN.md §Strided-lowering) drawn at random: the batched
+    runtime must match the per-image oracle bit for bit."""
+    rng = np.random.default_rng(308)
+    for case in range(6):
+        c = int(rng.integers(1, 5))
+        f = int(rng.integers(1, 9))
+        hw = int(rng.choice([8, 12, 16]))
+        k, pad = (3, 1) if rng.random() < 0.5 else (2, 0)
+        spec = LayerSpec(
+            f"s2_{case}", "conv",
+            rng.integers(-8, 8, (f, c, k, k)).astype(np.int8),
+            rng.integers(-100, 100, (f,)).astype(np.int32),
+            stride=2, padding=pad, relu=bool(rng.integers(2)))
+        inp = rng.integers(-32, 64, (1, c, hw, hw)).astype(np.int8)
+        layer = compile_layer(spec, inp)
+        assert (layer.out_h, layer.out_w) == (hw // 2, hw // 2)
+        prog = layer.program
+        stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
+        assert_batch_matches_oracle_loop(prog.config, prog.instructions,
+                                         stack, plan=plan_for(prog))
+
+
+def test_fuzz_gap_reduction_programs_batched():
+    """Global-avg-pool tree reductions: log2(H·W) ADD-pair rounds + one
+    SHR over the surviving row, including a β-chunked result (the tree
+    pins α into one chunk; the block columns still tile) and a program
+    small enough that its pair uops stream in LOAD_UOP waves."""
+    rng = np.random.default_rng(309)
+    cfgs = (vta_default(),
+            VTAConfig(inp_buff_vectors=256, wgt_buff_matrices=64,
+                      acc_buff_vectors=64, out_buff_vectors=64,
+                      uop_buff_entries=32))
+    for case in range(6):
+        cfg = cfgs[case % 2]
+        c = int(rng.integers(1, 5))
+        if case % 2 == 0:
+            f, hw = int(rng.integers(1, 9)), int(rng.choice([4, 8]))
+        else:                                  # β-chunked under the tiny ACC
+            f, hw = int(rng.integers(60, 90)), 4
+        spec = LayerSpec(
+            f"gap_{case}", "conv",
+            rng.integers(-6, 7, (f, c, 1, 1)).astype(np.int8),
+            rng.integers(-50, 50, (f,)).astype(np.int32),
+            relu=bool(rng.integers(2)), pool="gap")
+        inp = rng.integers(-32, 64, (1, c, hw, hw)).astype(np.int8)
+        layer = compile_layer(spec, inp, cfg=cfg)
+        assert layer.keep_rows == (0,)
+        if case % 2 == 1:
+            assert layer.n_chunks > 1          # β tiles, α stays whole
+        prog = layer.program
+        stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
 

@@ -78,6 +78,80 @@ def test_pool_diagnostics():
                       pool="max2x2"), t)
 
 
+def test_strided_geometry_diagnostics():
+    """DESIGN.md §Strided-lowering: strides > 2 and stride-2 grids that
+    silently drop input pixels must raise — never wrong bytes."""
+    rng = np.random.default_rng(3)
+    w3 = rng.integers(-4, 5, (4, 2, 3, 3)).astype(np.int8)
+    w2 = rng.integers(-4, 5, (4, 2, 2, 2)).astype(np.int8)
+    t8 = rng.integers(-16, 17, (1, 2, 8, 8)).astype(np.int8)
+    t9 = rng.integers(-16, 17, (1, 2, 9, 9)).astype(np.int8)
+    # stride values > 2 are outside the lowering's vocabulary
+    _raises("conv-stride-max", compile_layer,
+            LayerSpec("c", "conv", w3, stride=3, padding=1), t9)
+    _raises("conv-stride-max", compile_layer,
+            LayerSpec("c", "conv", w3, stride=4), t9)
+    # stride-2 on odd spatial dims without padding: the k2 window grid
+    # stops one pixel short of the input edge
+    _raises("conv-stride-tiling", compile_layer,
+            LayerSpec("c", "conv", w2, stride=2), t9)
+    # valid (pad-0) k3/s2 on even dims also leaves a dropped column
+    _raises("conv-stride-tiling", compile_layer,
+            LayerSpec("c", "conv", w3, stride=2), t8)
+    # the supported downsampling geometries compile: k3/s2/p1 halving,
+    # the k2/s2 projection shortcut, and valid k3/s2 on odd dims
+    for spec, t in ((LayerSpec("ok", "conv", w3, stride=2, padding=1), t8),
+                    (LayerSpec("ok", "conv", w2, stride=2), t8),
+                    (LayerSpec("ok", "conv", w3, stride=2), t9)):
+        layer = compile_layer(spec, t)
+        assert (layer.out_h, layer.out_w) == (4, 4)
+
+
+def test_gap_geometry_diagnostics():
+    """Global average pooling needs a square power-of-two map (the ÷H·W
+    must be one exact SHR) and never compiles a straddling tree."""
+    rng = np.random.default_rng(4)
+    w = rng.integers(-4, 5, (4, 2, 1, 1)).astype(np.int8)
+    gap = lambda: LayerSpec("g", "conv", w, relu=True, pool="gap")
+    _raises("gap-square", compile_layer, gap(),
+            rng.integers(-16, 17, (1, 2, 8, 4)).astype(np.int8))
+    _raises("gap-pow2", compile_layer, gap(),
+            rng.integers(-16, 17, (1, 2, 6, 6)).astype(np.int8))
+    # a GAP result too large for one ACC residency refuses to compile
+    # (the tree's pair groups may not straddle chunks)
+    from repro.core.hwconfig import VTAConfig
+    tiny = VTAConfig(inp_buff_vectors=256, wgt_buff_matrices=64,
+                     acc_buff_vectors=32, out_buff_vectors=64,
+                     uop_buff_entries=64)
+    _raises("alu-pair-group-chunk", compile_layer, gap(),
+            rng.integers(-16, 17, (1, 2, 8, 8)).astype(np.int8), cfg=tiny)
+    # GAP on fc raises like every pool kind
+    _raises("pool-needs-conv", compile_layer,
+            LayerSpec("f", "fc", np.zeros((16, 4), np.int8), pool="gap"),
+            np.zeros((1, 16), np.int8))
+
+
+def test_graph_builder_rejects_strided_geometry_early():
+    """The graph front end applies the same constraints: stride > 2 at
+    node construction, grid tiling at shape inference."""
+    from repro.graph import GraphBuilder, infer_shapes
+    rng = np.random.default_rng(5)
+    w3 = rng.integers(-4, 5, (4, 2, 3, 3)).astype(np.int8)
+    bld = GraphBuilder("bad")
+    x = bld.input("x", shape=(1, 2, 8, 8))
+    _raises("conv-stride-max", bld.conv, "c", x, w3, stride=3)
+    v = bld.conv("c", x, w3, stride=2)             # valid k3/s2 on 8×8
+    bld.output(v)
+    _raises("conv-stride-tiling", infer_shapes, bld.build())
+
+    bld2 = GraphBuilder("bad_gap")
+    x = bld2.input("x", shape=(1, 2, 6, 6))
+    v = bld2.conv("c", x, rng.integers(-4, 5, (4, 2, 1, 1)).astype(np.int8))
+    v = bld2.global_avg_pool("g", v)
+    bld2.output(v)
+    _raises("gap-pow2", infer_shapes, bld2.build())
+
+
 def test_requant_overflow_diagnostic():
     rng = np.random.default_rng(0)
     w = rng.integers(-6, 7, (4, 2, 3, 3)).astype(np.int8)

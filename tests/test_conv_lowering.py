@@ -6,8 +6,9 @@ pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core.conv_lowering import (ConvGeometry, avgpool2x2_plan,
-                                      conv2d_reference, im2row, im2row_batch,
-                                      ker2col, mat2tensor, maxpool2x2_plan,
+                                      conv2d_reference, global_avgpool_plan,
+                                      im2row, im2row_batch, ker2col,
+                                      mat2tensor, maxpool2x2_plan,
                                       tensor2mat, flatten_tensor)
 
 
@@ -130,3 +131,49 @@ def test_avgpool_plan_indices():
     # first window accumulates rows 1, 4, 5 into row 0
     assert plan.add_pairs[:3] == ((0, 1), (0, 4), (0, 5))
     assert plan.shr_indices == plan.keep_rows
+    assert (plan.div_shift, maxpool2x2_plan(4, 4).div_shift) == (2, 0)
+
+
+def test_global_avgpool_plan_tree_structure():
+    """DESIGN.md §Strided-lowering: log2(H·W) rounds, each with disjoint
+    (dst, src) lattices, folding every row into row 0; ÷(H·W) as one SHR."""
+    plan = global_avgpool_plan(4, 4)
+    assert (plan.out_h, plan.out_w) == (1, 1)
+    assert plan.keep_rows == plan.shr_indices == (0,)
+    assert (plan.mode, plan.div_shift) == ("gap", 4)
+    assert len(plan.rounds) == 4                   # log2(16)
+    assert plan.rounds[0] == ((0, 1), (2, 3), (4, 5), (6, 7), (8, 9),
+                              (10, 11), (12, 13), (14, 15))
+    assert plan.rounds[-1] == ((0, 8),)
+    assert plan.add_pairs == tuple(p for r in plan.rounds for p in r)
+    for rnd in plan.rounds:                        # disjoint per round
+        dsts = [d for d, _ in rnd]
+        srcs = [s for _, s in rnd]
+        assert len(set(dsts)) == len(dsts)
+        assert not set(dsts) & set(srcs)
+
+
+@given(log_hw=st.integers(0, 3), cols=st.integers(1, 6),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_global_avgpool_tree_sums_every_row(log_hw, cols, seed):
+    """Executing the ADD-pair program in order reduces row 0 to the
+    column sum of the whole matrix — for every power-of-two map size."""
+    hw = 2 ** log_hw
+    plan = global_avgpool_plan(hw, hw)
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(-10**6, 10**6, (hw * hw, cols)).astype(np.int64)
+    expected = mat.sum(axis=0)
+    work = mat.copy()
+    for dst, src in plan.add_pairs:
+        work[dst] += work[src]
+    np.testing.assert_array_equal(work[0], expected)
+    np.testing.assert_array_equal(expected >> plan.div_shift,
+                                  mat.sum(axis=0) >> (2 * log_hw))
+
+
+def test_global_avgpool_plan_rejects_bad_maps():
+    with pytest.raises(ValueError, match="square"):
+        global_avgpool_plan(4, 8)
+    with pytest.raises(ValueError, match="power-of-two"):
+        global_avgpool_plan(6, 6)

@@ -263,9 +263,11 @@ def test_linearize_rejects_unfusable_patterns():
 # ---------------------------------------------------------------------------
 
 def _random_graph(rng):
-    """A random small DAG: residual blocks, pools, branches, an fc head —
-    with a chance of deliberately broken structure (bad channel counts,
-    missing requants, joins of mismatched shapes)."""
+    """A random small DAG: residual blocks, pools, stride-2 downsampling
+    chains, GAP heads, branches, an fc head — with a chance of
+    deliberately broken structure (bad channel counts, missing requants,
+    joins of mismatched shapes, stride grids that drop pixels, GAP on
+    non-power-of-two maps)."""
     bld = GraphBuilder("fuzz")
     c = int(rng.integers(1, 5))
     hw = int(rng.choice([4, 6, 8]))
@@ -278,13 +280,19 @@ def _random_graph(rng):
         return f"{prefix}{uid[0]}"
 
     def conv_chain(src, sc, shw, *, relu=True, pool=None, requant=True,
-                   breakage=0.0):
+                   breakage=0.0, stride=1):
         f = int(rng.integers(1, 7))
-        k = int(rng.choice([1, 3]))
-        pad = (k - 1) // 2
+        if stride == 2:
+            # k3/p1 halving or the k2/p0 projection geometry — on odd
+            # extents the k2 grid drops a pixel (a wanted rejection path)
+            k, pad = (3, 1) if rng.random() < 0.5 else (2, 0)
+        else:
+            k = int(rng.choice([1, 3]))
+            pad = (k - 1) // 2
         in_c = sc if rng.random() >= breakage else sc + 1   # maybe broken
         v = bld.conv(fresh("c"), src, _w(rng, f, in_c, k, k), _b(rng, f),
-                     padding=pad)
+                     stride=stride, padding=pad)
+        shw = (shw + 2 * pad - k) // stride + 1
         if relu:
             v = bld.relu(fresh("r"), v)
         if pool and shw % 2 == 0:
@@ -298,7 +306,7 @@ def _random_graph(rng):
     for _ in range(depth):
         src, sc, shw = vals[int(rng.integers(0, len(vals)))]
         kind = rng.random()
-        if kind < 0.35 and shw >= 4:              # residual block
+        if kind < 0.3 and shw >= 4:               # residual block
             a, fa, _ = conv_chain(src, sc, shw, relu=True)
             bvi = bld.conv(fresh("c"), a, _w(rng, sc, fa, 3, 3),
                            _b(rng, sc), padding=1)
@@ -307,11 +315,15 @@ def _random_graph(rng):
             j = bld.relu(fresh("r"), j)
             v = bld.requant(fresh("q"), j)
             vals.append((v, sc, shw))
-        elif kind < 0.45:                          # deliberately unfused add
+        elif kind < 0.4:                           # deliberately unfused add
             other, oc, ohw = vals[int(rng.integers(0, len(vals)))]
             j = bld.add(fresh("j"), src, other)
             v = bld.requant(fresh("q"), j)
             vals.append((v, sc, shw))
+        elif kind < 0.55 and shw >= 3:             # stride-2 downsampling
+            v, f, shw2 = conv_chain(src, sc, shw, relu=bool(rng.integers(2)),
+                                    stride=2)
+            vals.append((v, f, shw2))
         else:                                      # plain conv chain
             pool = rng.choice([None, "max2x2", "avg2x2"])
             requant = rng.random() > 0.1           # sometimes missing
@@ -320,7 +332,17 @@ def _random_graph(rng):
                                     breakage=0.15)
             vals.append((v, f, shw2))
     src, sc, shw = vals[int(rng.integers(0, len(vals)))]
-    if rng.random() < 0.8:
+    tail = rng.random()
+    if tail < 0.25 and shw >= 1:                   # GAP head (maybe non-pow2)
+        v = bld.conv(fresh("c"), src, _w(rng, sc, sc, 1, 1), _b(rng, sc))
+        v = bld.relu(fresh("r"), v)
+        v = bld.global_avg_pool(fresh("g"), v)
+        v = bld.requant(fresh("q"), v)
+        v = bld.flatten(fresh("f"), v)
+        v = bld.fc(fresh("h"), v, _w(rng, sc, 5), _b(rng, 5))
+        v = bld.requant(fresh("q"), v)
+        bld.output(v)
+    elif tail < 0.8:
         v = bld.flatten(fresh("f"), src)
         v = bld.fc(fresh("h"), v, _w(rng, sc * shw * shw, 5), _b(rng, 5))
         v = bld.requant(fresh("q"), v)

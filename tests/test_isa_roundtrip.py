@@ -1,0 +1,298 @@
+"""ISA round-trip property suite (paper §2.3 / Fig. 3-4).
+
+The wire format is what the paper's certification argument rests on: a
+VTA program is *bytes*, and every analysis (simulators, cycle model,
+conformance suites) reasons about the decoded form.  Two layers of
+guard:
+
+* **Round-trip property** — ``decode(encode(insn)) == insn`` for every
+  instruction type and every bit field at its min/max/random values
+  (and ``decode_insn`` dispatching by opcode).  A deterministic
+  boundary sweep runs as the hypothesis-free tier-1 floor; the
+  hypothesis property (200+ examples per instruction type) runs when
+  the optional dependency is installed.
+* **Golden bytes** — the exact 16-byte encodings of one instruction of
+  each kind (and one 4-byte UOP) are pinned as hex.  Any change to a
+  field width, field order, or word endianness fails here even if it
+  round-trips, because it silently breaks compatibility with the VTA
+  hardware's fixed layout.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import isa
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # optional dev dependency
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Field universes: (name, min, max) per instruction type, from the bit
+# widths of the VTA hw_spec layout (W0/W1 class vars).
+# ---------------------------------------------------------------------------
+
+DEP_FIELDS = [("pop_prev", 0, 1), ("pop_next", 0, 1),
+              ("push_prev", 0, 1), ("push_next", 0, 1)]
+
+MEM_FIELDS = [("sram_base", 0, 2**16 - 1), ("dram_base", 0, 2**32 - 1),
+              ("y_size", 0, 2**16 - 1), ("x_size", 0, 2**16 - 1),
+              ("x_stride", 0, 2**16 - 1),
+              ("y_pad_0", 0, 15), ("y_pad_1", 0, 15),
+              ("x_pad_0", 0, 15), ("x_pad_1", 0, 15)]
+
+GEM_FIELDS = [("reset", 0, 1), ("uop_bgn", 0, 2**13 - 1),
+              ("uop_end", 0, 2**14 - 1), ("iter_out", 0, 2**14 - 1),
+              ("iter_in", 0, 2**14 - 1),
+              ("acc_factor_out", 0, 2**11 - 1), ("acc_factor_in", 0, 2**11 - 1),
+              ("inp_factor_out", 0, 2**11 - 1), ("inp_factor_in", 0, 2**11 - 1),
+              ("wgt_factor_out", 0, 2**10 - 1), ("wgt_factor_in", 0, 2**10 - 1)]
+
+ALU_FIELDS = [("reset", 0, 1), ("uop_bgn", 0, 2**13 - 1),
+              ("uop_end", 0, 2**14 - 1), ("iter_out", 0, 2**14 - 1),
+              ("iter_in", 0, 2**14 - 1),
+              ("dst_factor_out", 0, 2**11 - 1), ("dst_factor_in", 0, 2**11 - 1),
+              ("src_factor_out", 0, 2**11 - 1), ("src_factor_in", 0, 2**11 - 1),
+              ("use_imm", 0, 1), ("imm", -2**15, 2**15 - 1)]
+
+UOP_FIELDS = [("acc_idx", 0, 2**11 - 1), ("inp_idx", 0, 2**11 - 1),
+              ("wgt_idx", 0, 2**10 - 1)]
+
+
+def _mem(**kw):
+    kw.setdefault("opcode", isa.Opcode.LOAD)
+    kw.setdefault("memory_type", isa.MemId.INP)
+    base = dict(sram_base=0, dram_base=0, y_size=1, x_size=1, x_stride=1)
+    base.update(kw)
+    return isa.MemInsn(**base)
+
+
+def _dep_from_bits(bits):
+    return isa.DepFlags(**{n: int(b)
+                           for (n, _, _), b in zip(DEP_FIELDS, bits)})
+
+
+MAKERS = {
+    isa.MemInsn: (MEM_FIELDS, _mem),
+    isa.GemInsn: (GEM_FIELDS, lambda **kw: isa.GemInsn(**kw)),
+    isa.AluInsn: (ALU_FIELDS, lambda **kw: isa.AluInsn(**kw)),
+}
+
+
+def _roundtrip(insn):
+    raw = insn.encode()
+    assert len(raw) == isa.INSN_BYTES
+    dec = isa.decode_insn(raw)            # dispatch by opcode, then decode
+    assert type(dec) is type(insn)
+    assert dec == insn
+    assert dec.encode() == raw            # encode∘decode is the identity too
+
+
+# ---------------------------------------------------------------------------
+# Deterministic boundary sweep (hypothesis-free tier-1 floor)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [isa.MemInsn, isa.GemInsn, isa.AluInsn])
+def test_every_field_roundtrips_at_min_and_max(cls):
+    """Each bit field at its extreme values, others random — every
+    combination must survive decode(encode(·)) bit-exactly."""
+    fields, make = MAKERS[cls]
+    # zlib.crc32, not hash(): string hashing is randomized per process,
+    # and this sweep must be reproducible
+    rng = np.random.default_rng(zlib.crc32(cls.__name__.encode()))
+    for name, lo, hi in fields:
+        for value in (lo, hi):
+            kw = {n: int(rng.integers(l, h + 1)) for n, l, h in fields}
+            kw[name] = value
+            dep_bits = [int(rng.integers(0, 2)) for _ in DEP_FIELDS]
+            insn = make(dep=_dep_from_bits(dep_bits), **kw)
+            _roundtrip(insn)
+    # all-min and all-max corners
+    for pick in (0, 1):
+        kw = {n: (l, h)[pick] for n, l, h in fields}
+        insn = make(dep=_dep_from_bits([pick] * 4), **kw)
+        _roundtrip(insn)
+
+
+def test_mem_opcode_and_memory_type_combinations():
+    for opcode in (isa.Opcode.LOAD, isa.Opcode.STORE):
+        for mem in isa.MemId:
+            _roundtrip(_mem(opcode=opcode, memory_type=mem,
+                            sram_base=3, dram_base=77, y_size=2, x_size=5,
+                            x_stride=9))
+
+
+def test_alu_opcode_and_signed_imm_roundtrip():
+    for op in isa.AluOp:
+        for imm in (-2**15, -1, 0, 1, 2**15 - 1):
+            _roundtrip(isa.AluInsn(alu_opcode=op, use_imm=1, imm=imm,
+                                   uop_bgn=0, uop_end=1))
+
+
+def test_finish_roundtrips_with_every_dep_combination():
+    for bits in range(16):
+        dep = _dep_from_bits([(bits >> i) & 1 for i in range(4)])
+        _roundtrip(isa.FinishInsn(dep=dep))
+
+
+def test_uop_roundtrips_at_boundaries():
+    rng = np.random.default_rng(5)
+    for name, lo, hi in UOP_FIELDS:
+        for value in (lo, hi):
+            kw = {n: int(rng.integers(l, h + 1)) for n, l, h in UOP_FIELDS}
+            kw[name] = value
+            u = isa.Uop(**kw)
+            raw = u.encode()
+            assert len(raw) == isa.UOP_BYTES
+            assert isa.Uop.decode(raw) == u
+
+
+def test_seeded_random_sweep_all_types():
+    """1000 random instructions across the four types + uops — the
+    deterministic bulk of the round-trip floor."""
+    rng = np.random.default_rng(42)
+    for _ in range(250):
+        for cls in (isa.MemInsn, isa.GemInsn, isa.AluInsn):
+            fields, make = MAKERS[cls]
+            kw = {n: int(rng.integers(l, h + 1)) for n, l, h in fields}
+            insn = make(dep=_dep_from_bits(rng.integers(0, 2, 4)), **kw)
+            _roundtrip(insn)
+        _roundtrip(isa.FinishInsn(dep=_dep_from_bits(rng.integers(0, 2, 4))))
+        kw = {n: int(rng.integers(l, h + 1)) for n, l, h in UOP_FIELDS}
+        u = isa.Uop(**kw)
+        assert isa.Uop.decode(u.encode()) == u
+
+
+def test_stream_roundtrip_and_length_guard():
+    rng = np.random.default_rng(7)
+    insns = [_mem(sram_base=1, dram_base=2, y_size=3, x_size=4, x_stride=5),
+             isa.GemInsn(uop_bgn=1, uop_end=4, iter_out=2, iter_in=16),
+             isa.AluInsn(alu_opcode=isa.AluOp.MAX, use_imm=1, imm=0),
+             isa.FinishInsn()]
+    raw = isa.encode_stream(insns)
+    assert len(raw) == len(insns) * isa.INSN_BYTES
+    assert isa.decode_stream(raw) == insns
+    with pytest.raises(ValueError):
+        isa.decode_stream(raw[:-1])
+    uops = [isa.Uop(int(rng.integers(0, 2**11)), int(rng.integers(0, 2**11)),
+                    int(rng.integers(0, 2**10))) for _ in range(9)]
+    assert isa.decode_uops(isa.encode_uops(uops)) == uops
+    with pytest.raises(ValueError):
+        isa.decode_uops(isa.encode_uops(uops)[:-2])
+
+
+def test_out_of_range_fields_are_rejected_at_encode():
+    """A field that does not fit its bit width must raise, not wrap —
+    wrapping would be silent wire corruption."""
+    with pytest.raises(ValueError):
+        _mem(sram_base=2**16).encode()
+    with pytest.raises(ValueError):
+        isa.GemInsn(uop_bgn=2**13).encode()
+    with pytest.raises(ValueError):
+        isa.AluInsn(dst_factor_out=2**11).encode()
+    with pytest.raises(ValueError):
+        isa.Uop(wgt_idx=2**10).encode()
+
+
+# ---------------------------------------------------------------------------
+# Golden bytes: the exact wire layout, pinned
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    "load": (lambda: isa.MemInsn(
+        isa.Opcode.LOAD, isa.MemId.ACC, sram_base=0x1234,
+        dram_base=0xDEADBEEF, y_size=7, x_size=640, x_stride=896,
+        y_pad_0=1, y_pad_1=2, x_pad_0=3, x_pad_1=4,
+        dep=isa.DepFlags(pop_prev=1, push_next=1)),
+        "c8d148bcfbb67a030700800280032143"),
+    "store": (lambda: isa.MemInsn(
+        isa.Opcode.STORE, isa.MemId.OUT, sram_base=5, dram_base=4096,
+        y_size=2, x_size=32, x_stride=64,
+        dep=isa.DepFlags(pop_prev=1, push_prev=1)),
+        "29160000400000000200200040000000"),
+    "gemm": (lambda: isa.GemInsn(
+        reset=0, uop_bgn=37, uop_end=101, iter_out=9, iter_in=16,
+        acc_factor_out=0, acc_factor_in=1, inp_factor_out=16,
+        inp_factor_in=1, wgt_factor_out=6, wgt_factor_in=0,
+        dep=isa.DepFlags(pop_prev=1, push_prev=1, pop_next=1)),
+        "3a25a00c480020000008000402600000"),
+    "alu": (lambda: isa.AluInsn(
+        alu_opcode=isa.AluOp.SHR, uop_bgn=1, uop_end=2, iter_out=24,
+        iter_in=16, dst_factor_out=16, dst_factor_in=1, src_factor_out=16,
+        src_factor_in=1, use_imm=1, imm=-6,
+        dep=isa.DepFlags(push_next=1)),
+        "44014000c0002000100800040270fd7f"),
+    "finish": (lambda: isa.FinishInsn(dep=isa.DepFlags(pop_next=1)),
+               "13000000000000000000000000000000"),
+}
+GOLDEN_UOP = (lambda: isa.Uop(acc_idx=0x5A5, inp_idx=0x3C3, wgt_idx=0x2A2),
+              "a51d9ea8")
+
+
+@pytest.mark.parametrize("kind", sorted(GOLDEN))
+def test_golden_bytes_regression(kind):
+    """The pinned 16-byte little-endian encodings — a format change that
+    still round-trips (e.g. swapped field order) fails here."""
+    make, hexbytes = GOLDEN[kind]
+    insn = make()
+    assert insn.encode().hex() == hexbytes
+    assert isa.decode_insn(bytes.fromhex(hexbytes)) == insn
+
+
+def test_golden_uop_bytes_regression():
+    make, hexbytes = GOLDEN_UOP
+    uop = make()
+    assert uop.encode().hex() == hexbytes
+    assert isa.Uop.decode(bytes.fromhex(hexbytes)) == uop
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property (200+ examples per instruction type; skips cleanly
+# when the optional dependency is absent)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    def _dep_strategy():
+        return st.builds(isa.DepFlags, *[st.integers(0, 1)] * 4)
+
+    def _fields_strategy(fields):
+        return {n: st.integers(lo, hi) for n, lo, hi in fields}
+
+    @settings(max_examples=200, deadline=None)
+    @given(opcode=st.sampled_from([isa.Opcode.LOAD, isa.Opcode.STORE]),
+           memory_type=st.sampled_from(list(isa.MemId)),
+           dep=_dep_strategy(), **_fields_strategy(MEM_FIELDS))
+    def test_hypothesis_mem_roundtrip(opcode, memory_type, dep, **kw):
+        _roundtrip(isa.MemInsn(opcode=opcode, memory_type=memory_type,
+                               dep=dep, **kw))
+
+    @settings(max_examples=200, deadline=None)
+    @given(dep=_dep_strategy(), **_fields_strategy(GEM_FIELDS))
+    def test_hypothesis_gemm_roundtrip(dep, **kw):
+        _roundtrip(isa.GemInsn(dep=dep, **kw))
+
+    @settings(max_examples=200, deadline=None)
+    @given(alu_opcode=st.sampled_from(list(isa.AluOp)), dep=_dep_strategy(),
+           **_fields_strategy(ALU_FIELDS))
+    def test_hypothesis_alu_roundtrip(alu_opcode, dep, **kw):
+        _roundtrip(isa.AluInsn(alu_opcode=alu_opcode, dep=dep, **kw))
+
+    @settings(max_examples=200, deadline=None)
+    @given(dep=_dep_strategy())
+    def test_hypothesis_finish_roundtrip(dep):
+        _roundtrip(isa.FinishInsn(dep=dep))
+
+    @settings(max_examples=200, deadline=None)
+    @given(**_fields_strategy(UOP_FIELDS))
+    def test_hypothesis_uop_roundtrip(**kw):
+        u = isa.Uop(**kw)
+        assert isa.Uop.decode(u.encode()) == u
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_roundtrip():
+        pass

@@ -1,0 +1,132 @@
+"""resnet8 end-to-end tests — ResNet-scale CNNs on the VTA.
+
+The acceptance contract of the strided lowering (DESIGN.md
+§Strided-lowering): resnet8 — 3 stages, two stride-2 stage transitions
+(k3/s2/p1 main path + k2/s2 projection shortcut each), three on-VTA
+residual joins, a global-average-pool head fused with a 1×1 mixing conv
+— compiles through the graph pipeline and serves **bit-identical across
+the oracle, fast and batched backends at batch 8**, with the GAP tree
+reduction visible as ALU ADD-pair instructions in the compiled head.
+
+Hypothesis-free: part of the tier-1 floor.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.models.resnet8 import (compile_resnet8, reference_forward_int8,
+                                  synthetic_image)
+
+
+@pytest.fixture(scope="module")
+def resnet8():
+    return compile_resnet8()
+
+
+def test_topology_strided_transitions_and_gap_head(resnet8):
+    net, _ = resnet8
+    names = [l.spec.name for l in net.layers]
+    assert names == ["stem", "b1a", "b1b", "t2a", "t2p", "t2b",
+                     "t3a", "t3p", "t3b", "head", "fc"]
+    # two stride-2 stage transitions, each a k3 main conv + k2 projection
+    strided = {l.spec.name: l.spec.weights.shape[2:]
+               for l in net.layers if l.spec.stride == 2}
+    assert strided == {"t2a": (3, 3), "t2p": (2, 2),
+                       "t3a": (3, 3), "t3p": (2, 2)}
+    # resolutions actually halve at each transition: 32 → 16 → 8 → GAP 1
+    dims = {l.spec.name: (l.out_h, l.out_w) for l in net.layers
+            if l.spec.kind == "conv"}
+    assert dims["b1b"] == (32, 32)
+    assert dims["t2a"] == dims["t2p"] == dims["t2b"] == (16, 16)
+    assert dims["t3a"] == dims["t3p"] == dims["t3b"] == (8, 8)
+    assert dims["head"] == (1, 1)                      # post-GAP
+    # three joins close on the VTA, each downsample join on its projection
+    assert net.residual_sources == [None, None, 0, None, None, 4,
+                                    None, None, 7, None, None]
+    # the stage-1 block is multi-chunk by construction (1024×144 matrices)
+    b1b = net.layers[2]
+    assert b1b.n_chunks > 1 and b1b.program.chunk_plan.acc_copies == 2
+
+
+def test_gap_head_is_a_tree_reduction_on_the_vta(resnet8):
+    """The GAP must execute as log2(H·W) ALU ADD-pair rounds + one SHR
+    over the surviving row — on the TensorAlu, not host numpy."""
+    net, _ = resnet8
+    head = [l for l in net.layers if l.spec.pool == "gap"][0]
+    assert head.keep_rows == (0,)
+    assert (head.out_h, head.out_w) == (1, 1)
+    # 8×8 map → 6 tree rounds; each round is one vector-vector ADD insn
+    adds = [i for i in head.program.instructions
+            if isinstance(i, isa.AluInsn)
+            and i.alu_opcode == isa.AluOp.ADD and not i.use_imm]
+    assert len(adds) == 6
+    # the ÷64 and the requant fold into one SHR over the surviving row
+    shrs = [i for i in head.program.instructions
+            if isinstance(i, isa.AluInsn) and i.alu_opcode == isa.AluOp.SHR]
+    assert len(shrs) == 1 and shrs[0].imm >= 6
+    # non-head layers carry no pool program
+    for l in net.layers:
+        if l.spec.pool is None:
+            assert l.keep_rows is None
+
+
+def test_residual_joins_execute_on_the_vta(resnet8):
+    """All three joins — identity and both projection joins — are ALU
+    vector-vector ADDs against an ACC-loaded skip operand."""
+    net, _ = resnet8
+    for layer in net.layers:
+        prog = layer.program
+        res_loads = [i for i in prog.instructions
+                     if isinstance(i, isa.MemInsn)
+                     and i.opcode == isa.Opcode.LOAD
+                     and i.memory_type == isa.MemId.ACC and i.sram_base > 0]
+        if layer.spec.residual_add:
+            assert len(res_loads) == layer.n_chunks
+            assert "res" in prog.regions
+        else:
+            assert not res_loads and "res" not in prog.regions
+    # at least one join needs a genuine on-device pre-shift (the t3
+    # branch keeps an octave of gain, so the projection arrives coarser)
+    assert any(l.spec.residual_pre_shift > 0 for l in net.layers
+               if l.spec.residual_add)
+
+
+def test_bit_identical_across_backends_at_batch_8(resnet8):
+    """Acceptance: one compiled plan, three execution paths, one answer —
+    at batch 8, against the graph's integer reference."""
+    net, graph = resnet8
+    out_fast, reps_fast = net.verify(backend="fast")
+    out_oracle, reps_oracle = net.verify(backend="oracle")
+    np.testing.assert_array_equal(out_oracle, out_fast)
+    assert [r.gemm_loops for r in reps_oracle] == \
+        [r.gemm_loops for r in reps_fast]
+    imgs = [synthetic_image(100 + r) for r in range(8)]
+    outs, reports = net.serve(imgs)
+    assert outs.shape[0] == 8 and len(reports) == len(net.layers)
+    for img, out in zip(imgs, outs):
+        np.testing.assert_array_equal(out, net.serve_one(img,
+                                                         backend="fast"))
+        np.testing.assert_array_equal(out, reference_forward_int8(graph,
+                                                                  img))
+    # spot-check one request on the (slow) oracle serving path too
+    np.testing.assert_array_equal(
+        outs[0], net.serve_one(imgs[0], backend="oracle"))
+
+
+def test_logits_vary_across_inputs(resnet8):
+    """The requant plan must leave signal: different images produce
+    different logits (the network did not calibrate itself to zero)."""
+    net, graph = resnet8
+    a = reference_forward_int8(graph, synthetic_image(100))
+    b = reference_forward_int8(graph, synthetic_image(101))
+    assert a.any() and b.any()
+    assert not np.array_equal(a, b)
+
+
+def test_gemm_loop_budget_is_stable(resnet8):
+    """The §5.1 metric for the new workload, pinned (53252 ≈ 18× the
+    LeNet-5 2942) so instruction-schedule regressions surface here."""
+    net, _ = resnet8
+    assert net.gemm_loops() == 53252
+    assert net.chunks_per_layer() == [1, 5, 5, 2, 1, 3, 1, 1, 2, 1, 1]
