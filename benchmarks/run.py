@@ -68,6 +68,14 @@ def _kernel_rows():
             for row in kernel_bench.all_tables()]
 
 
+def _faults_rows():
+    from benchmarks import fault_campaign
+    data = fault_campaign.collect()
+    pathlib.Path("BENCH_faults.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return fault_campaign.all_tables(data)
+
+
 def _roofline_rows():
     # roofline summary (prefer the final sweep, fall back to baseline)
     dry = pathlib.Path("experiments/final")
@@ -95,11 +103,14 @@ SECTIONS = (
     ("resnet8", ("resnet8/",), _resnet8_rows),
     ("serving", ("serve/",), _serving_rows),
     ("kernels", ("kernel/", "pallas/", "xla/", "hlo/"), _kernel_rows),
+    ("faults", ("faults/",), _faults_rows),
     ("roofline", ("roofline/",), _roofline_rows),
 )
 
-# Rows whose paper column must match bit-for-bit (the §5 claims).
-EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles"}
+# Rows whose paper column must match bit-for-bit (the §5 claims, plus the
+# §Hardening zero-silent-data-corruption contract).
+EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles",
+              "faults/lenet5/sdc_total", "faults/resnet8/sdc_total"}
 
 
 def _section_matches(prefixes, only: str) -> bool:

@@ -60,7 +60,8 @@ import numpy as np
 from . import isa
 from .hwconfig import VTAConfig
 from .layout import truncate_int8
-from .simulator import SimReport, TokenQueues, VTAHazardError  # noqa: F401
+from .simulator import (SimReport, TokenQueues, VTABoundsError,  # noqa: F401
+                        VTAHazardError)
 
 # Bound the per-chunk gather footprint of the GEMM einsum (the WGT gather
 # materialises block_size² int64 per lattice point).
@@ -89,6 +90,7 @@ class _LoadStep:
     sram_idx: np.ndarray        # (n,) destination structure indices
     byte_idx: np.ndarray        # (n, nbytes) DRAM byte gather lattice
     end_byte: int               # max byte index + 1, for the bounds check
+    sram_end: int = 0           # max SRAM struct touched + 1 (pads included)
     contig: bool = False        # SRAM span and DRAM bytes both contiguous
     byte_start: int = 0         # first DRAM byte (contig fast path)
 
@@ -190,10 +192,12 @@ def _compile_load(cfg: VTAConfig, m: isa.MemInsn) -> _LoadStep:
         and np.array_equal(byte_idx.reshape(-1),
                            np.arange(byte_idx[0, 0],
                                      byte_idx[0, 0] + n * nbytes)))
+    sram_end = max(m.sram_base + zero_len,
+                   int(sram_idx.max(initial=m.sram_base - 1)) + 1)
     return _LoadStep(kind=kind, mem=m.memory_type, nbytes=nbytes,
                      zero_base=m.sram_base, zero_len=zero_len,
                      sram_idx=sram_idx, byte_idx=byte_idx, end_byte=end_byte,
-                     contig=contig,
+                     sram_end=sram_end, contig=contig,
                      byte_start=int(byte_idx[0, 0]) if n else 0)
 
 
@@ -319,12 +323,13 @@ class FastSimulator:
     """Vectorized VTA functional simulator — bit-exact vs the oracle."""
 
     def __init__(self, cfg: VTAConfig, dram: np.ndarray, *,
-                 trace: bool = False):
+                 trace: bool = False, count_overflows: bool = False):
         if dram.dtype != np.uint8:
             raise TypeError("dram image must be uint8")
         self.cfg = cfg
         self.dram = dram.copy()
         self.trace = trace
+        self.count_overflows = count_overflows
         bs = cfg.block_size
         self.uop_buf = np.zeros((cfg.uop_buff_entries, 3), dtype=np.int64)
         self.inp_buf = np.zeros((cfg.inp_buff_vectors, bs), dtype=np.int8)
@@ -368,11 +373,25 @@ class FastSimulator:
                 data.astype("<i4")).view(np.uint8).reshape(n, -1)
         raise ValueError(kind)
 
+    def _check_load(self, p: _LoadStep, cap: int, dram_len: int) -> None:
+        """Shared LOAD bounds validation (single-image and batched).
+
+        The SRAM check covers the *padding* span too — zero-fill through a
+        slice used to clip silently past the buffer end while the oracle
+        raised (the audited divergence; DESIGN.md §Hardening)."""
+        if p.end_byte > dram_len:
+            raise VTABoundsError(
+                f"LOAD {p.kind.upper()} DRAM span ends at byte {p.end_byte} "
+                f"> image size {dram_len}")
+        if (p.zero_len or p.sram_idx.size) and p.sram_end > cap:
+            raise VTABoundsError(
+                f"LOAD {p.kind.upper()} SRAM span [{p.zero_base}, "
+                f"{p.sram_end}) exceeds buffer capacity {cap} "
+                f"(padding included)")
+
     def _exec_load(self, p: _LoadStep) -> None:
-        if p.end_byte > len(self.dram):
-            raise IndexError(
-                f"DRAM read out of range: {p.kind} load ends @{p.end_byte:#x}")
         buf = self._buf_of(p.kind)
+        self._check_load(p, buf.shape[0], len(self.dram))
         if p.zero_len:
             buf[p.zero_base:p.zero_base + p.zero_len] = 0
         if p.sram_idx.size:
@@ -380,17 +399,22 @@ class FastSimulator:
             buf[p.sram_idx] = self._decode_structs(p.kind, raw)
         self.report.dram_bytes_read += p.byte_idx.size
 
+    def _check_store(self, p: _StoreStep, cap: int, dram_len: int) -> None:
+        if p.end_byte > dram_len:
+            raise VTABoundsError(
+                f"STORE {p.kind.upper()} DRAM span ends at byte "
+                f"{p.end_byte} > image size {dram_len}")
+        if p.sram_base + p.n > cap:
+            raise VTABoundsError(
+                f"STORE {p.kind.upper()} SRAM span [{p.sram_base}, "
+                f"{p.sram_base + p.n}) exceeds buffer capacity {cap}")
+
     def _exec_store(self, p: _StoreStep) -> None:
         if p.n == 0:
             return            # degenerate geometry: the oracle's loop is empty
-        if p.end_byte > len(self.dram):
-            raise IndexError(
-                f"DRAM write out of range: {p.kind} store ends "
-                f"@{p.end_byte:#x}")
         buf = self._buf_of(p.kind)
+        self._check_store(p, buf.shape[0], len(self.dram))
         data = buf[p.sram_base:p.sram_base + p.n]
-        if data.shape[0] < p.n:
-            raise IndexError(f"SRAM read out of range: {p.kind} store")
         raw = self._encode_structs(p.kind, data)
         if p.byte_idx is not None:
             self.dram[p.byte_idx] = raw
@@ -406,17 +430,46 @@ class FastSimulator:
         in the oracle's loop order (i_out, i_in, u)."""
         return (off[:, None] + u_field[None, :]).reshape(-1)
 
+    def _check_uop_range(self, u_idx: np.ndarray, entries: int,
+                         what: str) -> None:
+        if u_idx.size and int(u_idx[-1]) >= entries:
+            raise VTABoundsError(
+                f"{what} uop range [{int(u_idx[0])}, {int(u_idx[-1]) + 1}) "
+                f"exceeds UOP buffer capacity {entries}")
+
+    @staticmethod
+    def _check_lattice(idx: np.ndarray, cap: int, what: str) -> None:
+        """Pre-mutation index-range check over a whole GEMM/ALU lattice."""
+        if idx.size:
+            hi = int(idx.max())
+            if hi >= cap or int(idx.min()) < 0:
+                raise VTABoundsError(
+                    f"{what} index {hi if hi >= cap else int(idx.min())} "
+                    f"out of range for buffer of {cap}")
+
+    def _truncate_acc64(self, acc64: np.ndarray, out: np.ndarray) -> None:
+        """int64 working copy → int32 buffer, counting wrapped lanes."""
+        wrapped = acc64.astype(np.int32)
+        if self.count_overflows:
+            self.report.acc_overflow_lanes += int(
+                np.count_nonzero(acc64 != wrapped))
+        out[:] = wrapped
+
     def _exec_gemm(self, p: _GemmStep) -> None:
         if p.loop_count == 0:
             return
+        self._check_uop_range(p.u_idx, self.uop_buf.shape[0], "GEMM")
         uop = self.uop_buf[p.u_idx]                      # (nu, 3)
         x_idx = self._lattice(p.off_acc, uop[:, 0])
+        self._check_lattice(x_idx, self.acc_buf.shape[0], "GEMM ACC")
         if p.reset:
             self.acc_buf[x_idx] = 0
             self.report.gemm_reset_loops += p.loop_count
             return
         a_idx = self._lattice(p.off_inp, uop[:, 1])
         w_idx = self._lattice(p.off_wgt, uop[:, 2])
+        self._check_lattice(a_idx, self.inp_buf.shape[0], "GEMM INP")
+        self._check_lattice(w_idx, self.wgt_buf.shape[0], "GEMM WGT")
         bs = self.cfg.block_size
         chunk = max(1, _GEMM_CHUNK_BYTES // (bs * bs * 8))
         acc64 = self.acc_buf.astype(np.int64)
@@ -427,7 +480,7 @@ class FastSimulator:
             # out[l, i] = Σ_j A[l, j] · W[l, i, j]  (W stored transposed)
             prod = np.einsum("lij,lj->li", W, A)
             _scatter_add(acc64, x_idx[sl], prod)
-        self.acc_buf[:] = acc64.astype(np.int32)             # wrap-around
+        self._truncate_acc64(acc64, self.acc_buf)            # wrap-around
         self.report.gemm_loops += p.loop_count
 
     # -------------------------------------------------------------- alu --
@@ -446,19 +499,22 @@ class FastSimulator:
     def _exec_alu(self, p: _AluStep) -> None:
         if p.loop_count == 0:
             return
+        self._check_uop_range(p.u_idx, self.uop_buf.shape[0], "ALU")
         uop = self.uop_buf[p.u_idx]
         d_idx = self._lattice(p.off_dst, uop[:, 0])
+        self._check_lattice(d_idx, self.acc_buf.shape[0], "ALU ACC dst")
         acc64 = self.acc_buf.astype(np.int64)
         if p.use_imm:
             self._alu_imm(acc64, p, d_idx)
         else:
             s_idx = self._lattice(p.off_src, uop[:, 1])
+            self._check_lattice(s_idx, self.acc_buf.shape[0], "ALU ACC src")
             if np.intersect1d(d_idx, s_idx).size:
                 # Read-after-write across lattice points: oracle order.
                 self._alu_sequential(acc64, p.op, d_idx, s_idx)
             else:
                 self._alu_pair(acc64, p.op, d_idx, s_idx)
-        self.acc_buf[:] = acc64.astype(np.int32)
+        self._truncate_acc64(acc64, self.acc_buf)
         self.report.alu_loops += p.loop_count
 
     def _alu_imm(self, acc64: np.ndarray, p: _AluStep,
@@ -512,18 +568,26 @@ class FastSimulator:
     # -------------------------------------------------------------- run --
     def _commit_out(self) -> None:
         """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
+        if self.count_overflows:
+            self.report.acc_saturation_lanes += int(np.count_nonzero(
+                (self.acc_buf < -128) | (self.acc_buf > 127)))
         self.out_buf[:] = truncate_int8(self.acc_buf)
 
-    def run(self, instructions, plan: Optional[InstructionPlan] = None
-            ) -> SimReport:
+    def run(self, instructions, plan: Optional[InstructionPlan] = None,
+            *, fault_hook=None) -> SimReport:
         """Execute an instruction stream.  Pass a cached ``plan`` (from
         :func:`plan_for` / :func:`compile_plan`) to skip plan compilation;
-        it must have been compiled from these instructions."""
+        it must have been compiled from these instructions.
+        ``fault_hook(sim, insn_idx)`` fires before each instruction — the
+        harden subsystem's injection/watchdog point (DESIGN.md §Hardening).
+        """
         if plan is None:
             plan = compile_plan(self.cfg, instructions)
         elif plan.n_insns != len(instructions):
             raise ValueError("plan does not match instruction stream")
-        for insn, step in plan.steps:
+        for i, (insn, step) in enumerate(plan.steps):
+            if fault_hook is not None:
+                fault_hook(self, i)
             self.tokens.pre(insn)
             if isinstance(step, _LoadStep):
                 self._exec_load(step)
@@ -576,13 +640,15 @@ class BatchFastSimulator(FastSimulator):
     """
 
     def __init__(self, cfg: VTAConfig, dram: np.ndarray, *,
-                 trace: bool = False, copy_dram: bool = True):
+                 trace: bool = False, copy_dram: bool = True,
+                 count_overflows: bool = False):
         if dram.dtype != np.uint8:
             raise TypeError("dram stack must be uint8")
         if dram.ndim != 2 or dram.shape[0] < 1:
             raise ValueError(
                 "batched dram image must be (batch, nbytes) with batch >= 1")
         self.cfg = cfg
+        self.count_overflows = count_overflows
         self.batch = int(dram.shape[0])
         # copy_dram=False hands the stack over without the defensive copy —
         # the serve loop owns its stack and re-reads it from ``sim.dram``,
@@ -611,10 +677,8 @@ class BatchFastSimulator(FastSimulator):
 
     # -------------------------------------------------------------- mem --
     def _exec_load(self, p: _LoadStep) -> None:
-        if p.end_byte > self.dram.shape[1]:
-            raise IndexError(
-                f"DRAM read out of range: {p.kind} load ends @{p.end_byte:#x}")
         buf = self._buf_of(p.kind)
+        self._check_load(p, buf.shape[1], self.dram.shape[1])
         if p.zero_len:
             buf[:, p.zero_base:p.zero_base + p.zero_len] = 0
         if p.sram_idx.size:
@@ -641,14 +705,9 @@ class BatchFastSimulator(FastSimulator):
     def _exec_store(self, p: _StoreStep) -> None:
         if p.n == 0:
             return
-        if p.end_byte > self.dram.shape[1]:
-            raise IndexError(
-                f"DRAM write out of range: {p.kind} store ends "
-                f"@{p.end_byte:#x}")
         buf = self._buf_of(p.kind)
+        self._check_store(p, buf.shape[1], self.dram.shape[1])
         data = buf[:, p.sram_base:p.sram_base + p.n]
-        if data.shape[1] < p.n:
-            raise IndexError(f"SRAM read out of range: {p.kind} store")
         raw = self._encode_structs(
             p.kind, data.reshape((self.batch * p.n,) + data.shape[2:]))
         raw = raw.reshape(self.batch, p.n, p.nbytes)
@@ -672,7 +731,7 @@ class BatchFastSimulator(FastSimulator):
         if lat.size:
             hi = int(lat.max())
             if hi >= span or int(lat.min()) < 0:
-                raise IndexError(
+                raise VTABoundsError(
                     f"{what} index {hi} out of range for buffer of {span}")
         lat = lat + (np.arange(self.batch, dtype=np.int64)
                      * span)[:, None, None]
@@ -684,9 +743,33 @@ class BatchFastSimulator(FastSimulator):
         """Single-image lattice shared by the whole (uniform-UOP) batch."""
         return (off[:, None] + u_field[None, :]).reshape(-1)
 
+    def _accum_rows(self, idx: np.ndarray, red: np.ndarray) -> None:
+        """``acc_buf[:, idx] += red`` — int32 wrap, optionally counted."""
+        if not self.count_overflows:
+            self.acc_buf[:, idx] += red
+            return
+        wide = self.acc_buf[:, idx].astype(np.int64) + red.astype(np.int64)
+        wrapped = wide.astype(np.int32)
+        self.report.acc_overflow_lanes += int(
+            np.count_nonzero(wide != wrapped))
+        self.acc_buf[:, idx] = wrapped
+
+    def _accum_flat(self, acc_flat: np.ndarray, idx: np.ndarray,
+                    red: np.ndarray) -> None:
+        """``acc_flat[idx] += red`` over the flattened batch index space."""
+        if not self.count_overflows:
+            acc_flat[idx] += red
+            return
+        wide = acc_flat[idx].astype(np.int64) + red.astype(np.int64)
+        wrapped = wide.astype(np.int32)
+        self.report.acc_overflow_lanes += int(
+            np.count_nonzero(wide != wrapped))
+        acc_flat[idx] = wrapped
+
     def _exec_gemm(self, p: _GemmStep) -> None:
         if p.loop_count == 0:
             return
+        self._check_uop_range(p.u_idx, self.uop_buf.shape[1], "GEMM")
         if self._uniform["uop"]:
             self._gemm_shared(p)
         else:
@@ -702,11 +785,14 @@ class BatchFastSimulator(FastSimulator):
         wraps mod 2**32 exactly like the oracle's per-step truncation."""
         uop = self.uop_buf[0, p.u_idx]                        # (nu, 3)
         x_idx = self._shared_lattice(p.off_acc, uop[:, 0])
+        self._check_lattice(x_idx, self.acc_buf.shape[1], "GEMM ACC")
         if p.reset:
             self.acc_buf[:, x_idx] = 0
             return
         a_idx = self._shared_lattice(p.off_inp, uop[:, 1])
         w_idx = self._shared_lattice(p.off_wgt, uop[:, 2])
+        self._check_lattice(a_idx, self.inp_buf.shape[1], "GEMM INP")
+        self._check_lattice(w_idx, self.wgt_buf.shape[1], "GEMM WGT")
         bs = self.cfg.block_size
         b = self.batch
         w_uniform = self._uniform["wgt"]
@@ -759,7 +845,7 @@ class BatchFastSimulator(FastSimulator):
             else:
                 order, sidx, starts = _group(x_idx[sl])
             red = np.add.reduceat(prod[:, order], starts, axis=1)
-            self.acc_buf[:, sidx[starts]] += red              # int32 wrap
+            self._accum_rows(sidx[starts], red)               # int32 wrap
 
     def _gemm_shared_fused(self, a_idx: np.ndarray, w_idx: np.ndarray,
                            order: np.ndarray, ud: np.ndarray,
@@ -786,7 +872,7 @@ class BatchFastSimulator(FastSimulator):
                 Ag.transpose(1, 2, 3, 0)).reshape(-1, ncon, b)
             prod = np.matmul(Wg.astype(np.float32), Ag.astype(np.float32))
             red = prod.transpose(2, 0, 1).astype(np.int32)    # (B, g, bs)
-            self.acc_buf[:, ud[sl]] += red            # int32 wrap
+            self._accum_rows(ud[sl], red)             # int32 wrap
 
     def _gemm_general(self, p: _GemmStep) -> None:
         """Per-image UOP buffers: flatten every image's lattice into one
@@ -820,7 +906,7 @@ class BatchFastSimulator(FastSimulator):
                 prod = np.einsum("lij,lj->li", W, A, dtype=np.int32)
             order, sidx, starts = _group(x_idx[sl])
             red = np.add.reduceat(prod[order], starts, axis=0)
-            acc_flat[sidx[starts]] += red                     # int32 wrap
+            self._accum_flat(acc_flat, sidx[starts], red)     # int32 wrap
 
     # -------------------------------------------------------------- alu --
     def _exec_alu(self, p: _AluStep) -> None:
@@ -828,22 +914,19 @@ class BatchFastSimulator(FastSimulator):
             return
         bs = self.cfg.block_size
         n_acc = self.acc_buf.shape[1]
+        self._check_uop_range(p.u_idx, self.uop_buf.shape[1], "ALU")
         if self._uniform["uop"]:
             uop = self.uop_buf[0, p.u_idx]
             d_idx = self._shared_lattice(p.off_dst, uop[:, 0])
-            if d_idx.size and (int(d_idx.max()) >= n_acc
-                               or int(d_idx.min()) < 0):
-                raise IndexError("ACC dst index out of range")
+            self._check_lattice(d_idx, n_acc, "ALU ACC dst")
             if p.use_imm:
                 self._alu_imm_shared(p, d_idx)
             else:
                 s_idx = self._shared_lattice(p.off_src, uop[:, 1])
-                if s_idx.size and (int(s_idx.max()) >= n_acc
-                                   or int(s_idx.min()) < 0):
-                    # pre-offset bounds check, as in _batch_lattice: an
-                    # out-of-range source must raise (as the oracle does),
-                    # never read a neighbouring image's ACC rows
-                    raise IndexError("ACC src index out of range")
+                # pre-offset bounds check, as in _batch_lattice: an
+                # out-of-range source must raise (as the oracle does),
+                # never read a neighbouring image's ACC rows
+                self._check_lattice(s_idx, n_acc, "ALU ACC src")
                 if np.intersect1d(d_idx, s_idx).size:
                     # Same RAW pattern on every image: flatten globally and
                     # run the oracle-order loop once per (image, point).
@@ -875,7 +958,7 @@ class BatchFastSimulator(FastSimulator):
                     self._alu_sequential(acc64, p.op, d_idx, s_idx)
                 else:
                     self._alu_pair(acc64, p.op, d_idx, s_idx)
-            acc_flat[:] = acc64.astype(np.int32)
+            self._truncate_acc64(acc64, acc_flat)
         self.report.alu_loops += p.loop_count * self.batch
 
     def _alu_imm_shared(self, p: _AluStep, d_idx: np.ndarray) -> None:
@@ -896,7 +979,11 @@ class BatchFastSimulator(FastSimulator):
             counts = np.diff(np.r_[starts, d_idx.size]).astype(np.int64)
             shift = np.minimum((imm & 31) * counts, 63)
             sub >>= shift[None, :, None]
-        self.acc_buf[:, ud] = sub.astype(np.int32)            # wrap-around
+        wrapped = sub.astype(np.int32)                        # wrap-around
+        if self.count_overflows:
+            self.report.acc_overflow_lanes += int(
+                np.count_nonzero(sub != wrapped))
+        self.acc_buf[:, ud] = wrapped
 
     def _alu_pair_shared(self, op: isa.AluOp, d_idx: np.ndarray,
                          s_idx: np.ndarray) -> None:
@@ -917,11 +1004,16 @@ class BatchFastSimulator(FastSimulator):
             shift = np.minimum(
                 np.add.reduceat(svals & 31, starts, axis=1), 63)
             sub >>= shift
-        self.acc_buf[:, ud] = sub.astype(np.int32)            # wrap-around
+        wrapped = sub.astype(np.int32)                        # wrap-around
+        if self.count_overflows:
+            self.report.acc_overflow_lanes += int(
+                np.count_nonzero(sub != wrapped))
+        self.acc_buf[:, ud] = wrapped
 
 
 def run_batch(cfg: VTAConfig, dram_stack: np.ndarray, instructions, *,
-              plan: Optional[InstructionPlan] = None, trace: bool = False
+              plan: Optional[InstructionPlan] = None, trace: bool = False,
+              fault_hook=None, count_overflows: bool = False
               ) -> Tuple[np.ndarray, SimReport]:
     """Execute one instruction stream over a ``(batch, nbytes)`` DRAM stack.
 
@@ -931,6 +1023,7 @@ def run_batch(cfg: VTAConfig, dram_stack: np.ndarray, instructions, *,
     across calls — the compile-once/serve-many path of
     :meth:`repro.core.network_compiler.NetworkProgram.serve`.
     """
-    sim = BatchFastSimulator(cfg, np.asarray(dram_stack), trace=trace)
-    report = sim.run(instructions, plan=plan)
+    sim = BatchFastSimulator(cfg, np.asarray(dram_stack), trace=trace,
+                             count_overflows=count_overflows)
+    report = sim.run(instructions, plan=plan, fault_hook=fault_hook)
     return sim.dram, report

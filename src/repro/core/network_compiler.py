@@ -93,7 +93,7 @@ class NetworkProgram:
 
     # ------------------------------------------------------------------
     def run_functional(self, *, check_chaining: bool = True,
-                       backend: str = "oracle"
+                       backend: str = "oracle", fault_hook=None
                        ) -> Tuple[np.ndarray, List[SimReport]]:
         """Fig. 12: one VTA execution per layer + host reshaping between.
 
@@ -129,8 +129,9 @@ class NetworkProgram:
                 self._stage_residual(image, layer, sem_res,
                                      check=check_chaining)
             sim = make_simulator(self.config, image, backend=backend)
-            reports.append(run_instructions(sim, layer.program.instructions,
-                                            program=layer.program))
+            reports.append(run_instructions(
+                sim, layer.program.instructions, program=layer.program,
+                fault_hook=self._layer_hook(fault_hook, k)))
             image = sim.dram   # VTA wrote its OUT region
             out_mat = decode_out_region(layer.program, image)
             sems.append(decode_layer_output(layer, out_mat))
@@ -150,6 +151,15 @@ class NetworkProgram:
         return out, reports
 
     # ------------------------------------------------------- serving --
+    @staticmethod
+    def _layer_hook(fault_hook, k: int):
+        """Adapt a network-level ``hook(sim, layer_idx, insn_idx)`` to the
+        simulator-level ``hook(sim, insn_idx)`` for layer ``k`` — the
+        injection/watchdog point of DESIGN.md §Hardening."""
+        if fault_hook is None:
+            return None
+        return lambda sim, i: fault_hook(sim, k, i)
+
     def plans(self) -> List[object]:
         """Per-layer compiled instruction plans, cached on the layer
         programs — the compile-once/serve-many contract: the returned
@@ -262,13 +272,25 @@ class NetworkProgram:
             raise ValueError("empty request batch")
         return [np.asarray(img) for img in imgs]
 
-    def serve_one(self, image: np.ndarray, *, backend: str = "fast"
-                  ) -> np.ndarray:
+    def serve_one(self, image: np.ndarray, *, backend: str = "fast",
+                  fault_hook=None, count_overflows: bool = False,
+                  guard=None):
         """One inference request: stage the image into layer 0's INP
         region, then run the chained per-layer VTA executions (Fig. 12)
         with the host reshaping between.  The per-layer instruction plans
         are cached on the programs, so requests after the first pay no
-        plan compilation."""
+        plan compilation.
+
+        ``guard`` (a :class:`repro.harden.GuardPolicy`) routes the request
+        through the integrity-guarded path — CRC verification, instruction
+        validation, bounded restore-and-retry — and changes the return
+        value to ``(output, GuardReport)`` (DESIGN.md §Hardening).
+        ``fault_hook(sim, layer_idx, insn_idx)`` fires before each
+        instruction of each layer (the harden/ injection point)."""
+        if guard is not None:
+            from repro.harden import guards as _guards
+            return _guards.guarded_serve_one(
+                self, image, guard, backend=backend, fault_hook=fault_hook)
         image_mem = self.dram_image()
         self._stage_layer_input(image_mem, self.layers[0], image)
         sems: List[np.ndarray] = []
@@ -280,15 +302,18 @@ class NetworkProgram:
             if rsrcs[k] is not None:
                 sem_res = image if rsrcs[k] < 0 else sems[rsrcs[k]]
                 self._stage_residual(image_mem, layer, sem_res)
-            sim = make_simulator(self.config, image_mem, backend=backend)
+            sim = make_simulator(self.config, image_mem, backend=backend,
+                                 count_overflows=count_overflows)
             run_instructions(sim, layer.program.instructions,
-                             program=layer.program)
+                             program=layer.program,
+                             fault_hook=self._layer_hook(fault_hook, k))
             image_mem = sim.dram
             out_mat = decode_out_region(layer.program, image_mem)
             sems.append(decode_layer_output(layer, out_mat))
         return sems[-1]
 
-    def serve(self, images) -> Tuple[np.ndarray, List[SimReport]]:
+    def serve(self, images, *, fault_hook=None,
+              count_overflows: bool = False, guard=None):
         """Compile-once/serve-many batched inference (DESIGN.md §Batching).
 
         ``images`` is a batch of requests (see :meth:`_as_image_list`).
@@ -302,7 +327,16 @@ class NetworkProgram:
 
         Returns ``(stacked outputs, per-layer batch-total reports)``: the
         leading output axis is the request index.
+
+        ``guard`` (a :class:`repro.harden.GuardPolicy`) routes the batch
+        through the integrity-guarded path and returns ``(outputs,
+        reports, guard_reports)`` with one :class:`GuardReport` per
+        request (DESIGN.md §Hardening).
         """
+        if guard is not None:
+            from repro.harden import guards as _guards
+            return _guards.guarded_serve(self, images, guard,
+                                         fault_hook=fault_hook)
         imgs = self._as_image_list(images)
         from .fast_simulator import BatchFastSimulator, plan_for
         base = self.dram_image()
@@ -320,9 +354,12 @@ class NetworkProgram:
                 self._stage_residual_batch(stack, layer, res_sems)
             # the loop owns ``stack`` and re-reads it from ``sim.dram``, so
             # the simulator's defensive copy is skipped
-            sim = BatchFastSimulator(self.config, stack, copy_dram=False)
+            sim = BatchFastSimulator(self.config, stack, copy_dram=False,
+                                     count_overflows=count_overflows)
             reports.append(sim.run(layer.program.instructions,
-                                   plan=plan_for(layer.program)))
+                                   plan=plan_for(layer.program),
+                                   fault_hook=self._layer_hook(fault_hook,
+                                                               k)))
             stack = sim.dram
             out_mats = decode_out_region_batch(layer.program, stack)
             all_sems.append([decode_layer_output(layer, m)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -53,6 +54,11 @@ class VTAProgram:
     # for the §3.3 chunk loop (n_chunks, segment geometry); None for
     # hand-written instruction streams.
     chunk_plan: Optional[object] = None
+    # CRC32 of every segment, captured by finalize() — the integrity
+    # reference the harden/ guards verify serves against (DESIGN.md
+    # §Hardening).  Segment bytes are immutable, so the values stay valid
+    # until a segment is replaced via set_segment (which refreshes them).
+    segment_crcs: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------
     def region(self, name: str) -> Region:
@@ -65,13 +71,17 @@ class VTAProgram:
                 f"segment {name!r}: {len(data)} bytes exceeds region size "
                 f"{region.nbytes}")
         self.segments[name] = data
+        if self.segment_crcs:
+            self.segment_crcs[name] = zlib.crc32(data)
 
     def finalize(self) -> None:
         """Encode UOPs + instructions into their DRAM segments.
 
         The instruction region is allocated here (last, per the TVM
         reference order) because its size is only known once instruction
-        generation has finished.
+        generation has finished.  Also captures the per-segment CRC32
+        reference values the runtime integrity guards verify against
+        (DESIGN.md §Hardening).
         """
         self.set_segment("uop", isa.encode_uops(self.uops))
         if "insn" not in self.regions:
@@ -79,6 +89,8 @@ class VTAProgram:
                 f"{self.name}:insn", "insn", self.config.insn_elem_bytes,
                 len(self.instructions))
         self.set_segment("insn", isa.encode_stream(self.instructions))
+        self.segment_crcs = {name: zlib.crc32(data)
+                             for name, data in self.segments.items()}
 
     # ------------------------------------------------------------------
     def dram_image(self) -> np.ndarray:

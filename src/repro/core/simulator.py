@@ -43,6 +43,18 @@ class VTAHazardError(RuntimeError):
     would deadlock the Load/Compute/Store modules on real hardware."""
 
 
+class VTABoundsError(VTAHazardError, IndexError):
+    """An SRAM or DRAM access outside the configured address space.
+
+    Every simulator backend raises this *before* mutating any state, with
+    the offending instruction fields in the message (DESIGN.md
+    §Hardening).  Historically these paths surfaced as bare numpy
+    ``IndexError``/``ValueError`` deep inside a gather — or, for
+    padding that ran past an SRAM buffer, as a silent clip on the
+    vectorised backends; the subclassing keeps ``IndexError`` callers
+    working while making the fault typed and attributable."""
+
+
 def module_of(insn) -> str:
     """Which VTA module executes ``insn`` (mirrors the VTA runtime):
     LOAD INP/WGT run on Load; LOAD UOP/ACC, GEMM and ALU on Compute;
@@ -109,6 +121,11 @@ class SimReport:
     dram_bytes_written: int = 0
     insn_executed: int = 0
     insn_trace: List[str] = dataclasses.field(default_factory=list)
+    # Integrity counters (DESIGN.md §Hardening) — populated only when the
+    # simulator is built with ``count_overflows=True``; the conformance
+    # suites compare loop/traffic fields, so these ride along freely.
+    acc_overflow_lanes: int = 0    # int32 lanes that wrapped in GEMM/ALU
+    acc_saturation_lanes: int = 0  # ACC lanes outside int8 at OUT commit
 
     @property
     def dram_bytes_total(self) -> int:
@@ -122,12 +139,14 @@ def _wrap32(x: np.ndarray) -> np.ndarray:
 class FunctionalSimulator:
     """Bit-accurate VTA functional simulator."""
 
-    def __init__(self, cfg: VTAConfig, dram: np.ndarray, *, trace: bool = False):
+    def __init__(self, cfg: VTAConfig, dram: np.ndarray, *, trace: bool = False,
+                 count_overflows: bool = False):
         if dram.dtype != np.uint8:
             raise TypeError("dram image must be uint8")
         self.cfg = cfg
         self.dram = dram.copy()
         self.trace = trace
+        self.count_overflows = count_overflows
         bs = cfg.block_size
         # SRAM buffers, in structure units.
         self.uop_buf = np.zeros((cfg.uop_buff_entries, 3), dtype=np.int64)
@@ -189,8 +208,51 @@ class FunctionalSimulator:
             np.ascontiguousarray(data).tobytes(), dtype=np.uint8)
         self.report.dram_bytes_written += nbytes
 
+    def _check_mem_bounds(self, insn: isa.MemInsn) -> None:
+        """Reject out-of-range SRAM/DRAM spans *before* any state mutates.
+
+        Shared bounds model for every backend (DESIGN.md §Hardening):
+        LOAD touches ``(pads+y_size) × (pads+x_size)`` consecutive SRAM
+        structs from ``sram_base`` (padding writes zeros, so it counts);
+        STORE consumes ``y_size × x_size``.  DRAM addresses grow
+        monotonically with y, so the last element of the last row bounds
+        the transfer."""
+        kind = self._MEM_KIND[insn.memory_type]
+        cap = self._mem_view(insn.memory_type).shape[0]
+        is_load = insn.opcode == isa.Opcode.LOAD
+        if is_load:
+            row_w = insn.x_pad_0 + insn.x_size + insn.x_pad_1
+            span = (insn.y_pad_0 + insn.y_size + insn.y_pad_1) * row_w
+        else:
+            span = insn.y_size * insn.x_size
+        if span and insn.sram_base + span > cap:
+            raise VTABoundsError(
+                f"{insn.opcode.name} {kind.upper()} SRAM span "
+                f"[{insn.sram_base}, {insn.sram_base + span}) exceeds "
+                f"buffer capacity {cap} (x_size={insn.x_size} "
+                f"y_size={insn.y_size} pads=({insn.x_pad_0},{insn.x_pad_1},"
+                f"{insn.y_pad_0},{insn.y_pad_1}))")
+        if insn.y_size and insn.x_size:
+            nbytes = self.cfg.elem_bytes(kind)
+            last = (insn.dram_base + (insn.y_size - 1) * insn.x_stride
+                    + insn.x_size - 1)
+            end = (last + 1) * nbytes
+            if end > self.dram_nbytes():
+                raise VTABoundsError(
+                    f"{insn.opcode.name} {kind.upper()} DRAM span ends at "
+                    f"byte {end} > image size {self.dram_nbytes()} "
+                    f"(dram_base={insn.dram_base:#x} x_size={insn.x_size} "
+                    f"y_size={insn.y_size} x_stride={insn.x_stride})")
+
+    def dram_nbytes(self) -> int:
+        return len(self.dram)
+
     def _exec_mem(self, insn: isa.MemInsn) -> None:
         kind = self._MEM_KIND[insn.memory_type]
+        if (insn.opcode == isa.Opcode.STORE
+                and insn.memory_type == isa.MemId.UOP):
+            raise ValueError("STORE UOP is not a valid VTA instruction")
+        self._check_mem_bounds(insn)
         buf = self._mem_view(insn.memory_type)
         if insn.opcode == isa.Opcode.LOAD:
             sram = insn.sram_base
@@ -224,7 +286,67 @@ class FunctionalSimulator:
     # ------------------------------------------------------------------
     # GEMM — Algorithm 1, verbatim loop structure.
     # ------------------------------------------------------------------
+    def _check_tensor_bounds(self, t, *, is_alu: bool) -> None:
+        """Static pre-check of every index a GEMM/ALU lattice will touch.
+
+        The maximum index per operand is ``max_outer_offset + max(uop
+        field)`` because iteration offsets and uop entries are both
+        non-negative; checking the maximum before the loop keeps the
+        per-element body unguarded (and un-mutated on failure)."""
+        what = "ALU" if is_alu else "GEMM"
+        if t.uop_end > self.uop_buf.shape[0]:
+            raise VTABoundsError(
+                f"{what} uop range [{t.uop_bgn}, {t.uop_end}) exceeds UOP "
+                f"buffer capacity {self.uop_buf.shape[0]}")
+        n_uop = max(0, t.uop_end - t.uop_bgn)
+        if n_uop == 0 or t.iter_out <= 0 or t.iter_in <= 0:
+            return
+        uops = self.uop_buf[t.uop_bgn:t.uop_end]
+        acc_cap = self.acc_buf.shape[0]
+        if is_alu:
+            d_off = ((t.iter_out - 1) * t.dst_factor_out
+                     + (t.iter_in - 1) * t.dst_factor_in)
+            hi = d_off + int(uops[:, 0].max())
+            if hi >= acc_cap:
+                raise VTABoundsError(
+                    f"ALU ACC dst index {hi} >= capacity {acc_cap} "
+                    f"(uop range [{t.uop_bgn}, {t.uop_end}))")
+            if not t.use_imm:
+                s_off = ((t.iter_out - 1) * t.src_factor_out
+                         + (t.iter_in - 1) * t.src_factor_in)
+                hi = s_off + int(uops[:, 1].max())
+                if hi >= acc_cap:
+                    raise VTABoundsError(
+                        f"ALU ACC src index {hi} >= capacity {acc_cap} "
+                        f"(uop range [{t.uop_bgn}, {t.uop_end}))")
+            return
+        x_off = ((t.iter_out - 1) * t.acc_factor_out
+                 + (t.iter_in - 1) * t.acc_factor_in)
+        hi = x_off + int(uops[:, 0].max())
+        if hi >= acc_cap:
+            raise VTABoundsError(
+                f"GEMM ACC index {hi} >= capacity {acc_cap} "
+                f"(uop range [{t.uop_bgn}, {t.uop_end}))")
+        if not t.reset:
+            a_off = ((t.iter_out - 1) * t.inp_factor_out
+                     + (t.iter_in - 1) * t.inp_factor_in)
+            hi = a_off + int(uops[:, 1].max())
+            if hi >= self.inp_buf.shape[0]:
+                raise VTABoundsError(
+                    f"GEMM INP index {hi} >= capacity "
+                    f"{self.inp_buf.shape[0]} "
+                    f"(uop range [{t.uop_bgn}, {t.uop_end}))")
+            w_off = ((t.iter_out - 1) * t.wgt_factor_out
+                     + (t.iter_in - 1) * t.wgt_factor_in)
+            hi = w_off + int(uops[:, 2].max())
+            if hi >= self.wgt_buf.shape[0]:
+                raise VTABoundsError(
+                    f"GEMM WGT index {hi} >= capacity "
+                    f"{self.wgt_buf.shape[0]} "
+                    f"(uop range [{t.uop_bgn}, {t.uop_end}))")
+
     def _exec_gemm(self, g: isa.GemInsn) -> None:
+        self._check_tensor_bounds(g, is_alu=False)
         n_uop = max(0, g.uop_end - g.uop_bgn)
         if g.reset:
             for i_out in range(g.iter_out):
@@ -247,12 +369,17 @@ class FunctionalSimulator:
                     W = self.wgt_buf[w].astype(np.int32)
                     # acc[x] += A · Wᵀ  (W stored transposed ⇒ A·B, §2.3)
                     prod = (A[None, :] * W).sum(axis=1, dtype=np.int64)
-                    self.acc_buf[x] = _wrap32(self.acc_buf[x].astype(np.int64)
-                                              + prod)
+                    wide = self.acc_buf[x].astype(np.int64) + prod
+                    wrapped = _wrap32(wide)
+                    if self.count_overflows:
+                        self.report.acc_overflow_lanes += int(
+                            np.count_nonzero(wide != wrapped))
+                    self.acc_buf[x] = wrapped
         self.report.gemm_loops += g.iter_out * g.iter_in * n_uop
 
     # ------------------------------------------------------------------
     def _exec_alu(self, a: isa.AluInsn) -> None:
+        self._check_tensor_bounds(a, is_alu=True)
         n_uop = max(0, a.uop_end - a.uop_bgn)
         for i_out in range(a.iter_out):
             for i_in in range(a.iter_in):
@@ -275,16 +402,29 @@ class FunctionalSimulator:
                         r = x >> (y & 31)
                     else:
                         raise ValueError(a.alu_opcode)
-                    self.acc_buf[d] = _wrap32(r)
+                    wrapped = _wrap32(r)
+                    if self.count_overflows:
+                        self.report.acc_overflow_lanes += int(
+                            np.count_nonzero(r != wrapped))
+                    self.acc_buf[d] = wrapped
         self.report.alu_loops += a.iter_out * a.iter_in * n_uop
 
     # ------------------------------------------------------------------
     def _commit_out(self) -> None:
         """ACC → OUT truncation (§2.1: OUT vectors are truncated ACC)."""
+        if self.count_overflows:
+            self.report.acc_saturation_lanes += int(np.count_nonzero(
+                (self.acc_buf < -128) | (self.acc_buf > 127)))
         self.out_buf[:] = truncate_int8(self.acc_buf)
 
-    def run(self, instructions) -> SimReport:
-        for insn in instructions:
+    def run(self, instructions, *, fault_hook=None) -> SimReport:
+        """Execute the stream.  ``fault_hook(sim, insn_idx)`` fires before
+        each instruction (dependency pops included) — the injection point
+        the harden subsystem uses for SRAM/transient faults and watchdog
+        deadline checks (DESIGN.md §Hardening)."""
+        for i, insn in enumerate(instructions):
+            if fault_hook is not None:
+                fault_hook(self, i)
             self.tokens.pre(insn)
             if isinstance(insn, isa.MemInsn):
                 if insn.opcode == isa.Opcode.STORE:
@@ -318,7 +458,8 @@ BACKENDS = ("oracle", "fast", "batched")
 
 
 def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
-                   backend: str = "oracle", trace: bool = False):
+                   backend: str = "oracle", trace: bool = False,
+                   count_overflows: bool = False):
     """Instantiate a simulator backend over a DRAM image.
 
     ``"oracle"`` is the per-struct Python interpreter above — the
@@ -330,33 +471,40 @@ def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
     looping ``"oracle"`` over the stack's rows.
     """
     if backend == "oracle":
-        return FunctionalSimulator(cfg, dram, trace=trace)
+        return FunctionalSimulator(cfg, dram, trace=trace,
+                                   count_overflows=count_overflows)
     if backend == "fast":
         from .fast_simulator import FastSimulator
-        return FastSimulator(cfg, dram, trace=trace)
+        return FastSimulator(cfg, dram, trace=trace,
+                             count_overflows=count_overflows)
     if backend == "batched":
         from .fast_simulator import BatchFastSimulator
-        return BatchFastSimulator(cfg, dram, trace=trace)
+        return BatchFastSimulator(cfg, dram, trace=trace,
+                                  count_overflows=count_overflows)
     raise ValueError(f"unknown simulator backend {backend!r}; "
                      f"expected one of {BACKENDS}")
 
 
-def run_instructions(sim, instructions, *, program: Optional[VTAProgram] = None
-                     ) -> SimReport:
+def run_instructions(sim, instructions, *, program: Optional[VTAProgram] = None,
+                     fault_hook=None) -> SimReport:
     """Run an instruction stream on either backend.
 
     On the fast backend, passing ``program`` reuses (or populates) the
     instruction plan cached on it, so repeated executions of the same
     program (batch serving) skip plan compilation entirely.
+    ``fault_hook(sim, insn_idx)`` is forwarded to the backend's run loop.
     """
     from .fast_simulator import FastSimulator, plan_for
     if isinstance(sim, FastSimulator) and program is not None:
-        return sim.run(instructions, plan=plan_for(program))
-    return sim.run(instructions)
+        return sim.run(instructions, plan=plan_for(program),
+                       fault_hook=fault_hook)
+    return sim.run(instructions, fault_hook=fault_hook)
 
 
 def run_program(prog: VTAProgram, *, trace: bool = False,
-                backend: str = "oracle") -> Tuple[np.ndarray, SimReport]:
+                backend: str = "oracle", fault_hook=None,
+                count_overflows: bool = False
+                ) -> Tuple[np.ndarray, SimReport]:
     """Execute a compiled program; return (decoded result matrix, report).
 
     The decoded matrix is the *unpadded* (M, N) int8 result, reconstructed
@@ -367,18 +515,24 @@ def run_program(prog: VTAProgram, *, trace: bool = False,
     point is :func:`run_program_batch`).
     """
     if backend == "batched":
-        outs, report = run_program_batch(prog, batch=1, trace=trace)
+        outs, report = run_program_batch(prog, batch=1, trace=trace,
+                                         fault_hook=fault_hook,
+                                         count_overflows=count_overflows)
         return outs[0], report
     sim = make_simulator(prog.config, prog.dram_image(),
-                         backend=backend, trace=trace)
-    report = run_instructions(sim, prog.instructions, program=prog)
+                         backend=backend, trace=trace,
+                         count_overflows=count_overflows)
+    report = run_instructions(sim, prog.instructions, program=prog,
+                              fault_hook=fault_hook)
     out = decode_out_region(prog, sim.dram)
     return out, report
 
 
 def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
                       dram_stack: Optional[np.ndarray] = None,
-                      trace: bool = False) -> Tuple[np.ndarray, SimReport]:
+                      trace: bool = False, fault_hook=None,
+                      count_overflows: bool = False
+                      ) -> Tuple[np.ndarray, SimReport]:
     """Execute one compiled program over a batch of DRAM images.
 
     Either pass ``dram_stack`` — a ``(batch, nbytes)`` uint8 stack whose
@@ -400,8 +554,9 @@ def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
             f"batch={batch} does not match dram_stack rows "
             f"{dram_stack.shape[0]}")
     sim = make_simulator(prog.config, dram_stack, backend="batched",
-                         trace=trace)
-    report = sim.run(prog.instructions, plan=plan_for(prog))
+                         trace=trace, count_overflows=count_overflows)
+    report = sim.run(prog.instructions, plan=plan_for(prog),
+                     fault_hook=fault_hook)
     return decode_out_region_batch(prog, sim.dram), report
 
 

@@ -1,0 +1,602 @@
+"""Runtime integrity guards for VTA serving (DESIGN.md §Hardening).
+
+Three independent detection layers, composed by :func:`guarded_serve` /
+:func:`guarded_serve_one` under a :class:`GuardPolicy`:
+
+1. **Segment CRCs** — ``VTAProgram.finalize()`` records a CRC32 per
+   segment; :func:`capture_golden` snapshots the immutable segments
+   (``wgt``/``uop``/``acc``/``insn`` — ``inp``/``res`` are re-staged per
+   request and ``out`` is device-written) and :func:`verify_network`
+   re-checks them before and after every serve.  Any single-bit DRAM
+   upset in a covered segment is detected deterministically.
+2. **Instruction-stream validation** — :func:`validate_program` re-encodes
+   the decoded stream and compares it against the segment bytes (catching
+   field-level corruption the CRC cannot see), then statically checks
+   every SRAM/DRAM access, the loop-lattice footprint, the STORE target,
+   the FINISH terminator and the §2.3 dependency tokens, rejecting with
+   typed :class:`~repro.core.errors.CompileError`\\ s.
+3. **Execution checks** — typed :class:`~repro.core.simulator.VTABoundsError`
+   raising before state mutation, a per-serve :class:`Watchdog` deadline
+   (the seed ``runtime/fault_tolerance.py`` pattern), optional ACC
+   overflow/saturation counters, and opt-in dual execution (a second
+   clean run whose output must match bit-for-bit — the only layer that
+   catches transient SRAM upsets that corrupt data in flight).
+
+Recovery: on any detection the guards re-stage the corrupted layers from
+the golden snapshot (bytes objects captured at snapshot time — immutable,
+so the snapshot cannot rot), re-decode the instruction stream from the
+golden bytes, and retry the serve up to ``GuardPolicy.max_retries`` times.
+A request never returns silently-wrong data: it returns a clean output or
+``None`` with ``GuardReport.outcome == "failed"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.errors import CompileError
+from repro.core.fast_simulator import invalidate_plan
+from repro.core.simulator import TokenQueues, VTAHazardError
+
+#: Segments that must not change between serves.  ``inp``/``res`` are
+#: re-staged per request; ``out`` is written by the device.
+IMMUTABLE_SEGMENTS = ("wgt", "uop", "acc", "insn")
+
+#: Static per-instruction work ceiling (lattice points / moved structs).
+#: Far above any real compiled program (LeNet-5's largest instruction is
+#: ~3k loops) and far below geometries that would exhaust memory.
+MAX_INSN_FOOTPRINT = 1 << 22
+
+
+class WatchdogTimeout(RuntimeError):
+    """A guarded serve exceeded its deadline (hung-queue fault model)."""
+
+
+class Watchdog:
+    """Per-serve deadline enforcement in a daemon thread — the seed
+    ``runtime/fault_tolerance.py`` watchdog pattern: ``arm`` before the
+    step, ``check`` at every instruction boundary (via the fault-hook
+    wrapper), ``stop`` when the serve path is done."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline = deadline_s
+        self._armed_at: Optional[float] = None
+        self._tripped = threading.Event()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(min(0.05, self.deadline / 4)):
+            armed = self._armed_at
+            if armed is not None and time.monotonic() - armed > self.deadline:
+                self._tripped.set()
+
+    def arm(self) -> None:
+        self._tripped.clear()
+        self._armed_at = time.monotonic()
+
+    def disarm(self) -> None:
+        self._armed_at = None
+
+    def check(self) -> None:
+        if self._tripped.is_set():
+            raise WatchdogTimeout("serve exceeded watchdog deadline")
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join()
+
+
+# ---------------------------------------------------------------------------
+# Policies and reports
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardPolicy:
+    """What the guarded serve path checks and how it recovers."""
+
+    verify_crc: bool = True            # pre/post segment CRC verification
+    validate_instructions: bool = True  # pre-execution stream validation
+    dual_execute: bool = False         # second clean run, bit-compare
+    dual_backend: str = "fast"         # backend of the shadow run
+    deadline_s: Optional[float] = None  # per-serve watchdog deadline
+    max_retries: int = 1               # restore-and-retry budget
+    count_overflows: bool = False      # ACC overflow/saturation counters
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """What the guards saw for one request (or one batched serve)."""
+
+    outcome: str = "clean"             # clean | recovered | failed
+    retries: int = 0
+    crc_failures: List[str] = dataclasses.field(default_factory=list)
+    validation_errors: List[str] = dataclasses.field(default_factory=list)
+    runtime_errors: List[str] = dataclasses.field(default_factory=list)
+    dual_mismatches: int = 0
+    watchdog_tripped: bool = False
+    restored_layers: int = 0
+    acc_overflow_lanes: int = 0
+    acc_saturation_lanes: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.outcome != "failed"
+
+    @property
+    def detections(self) -> int:
+        return (len(self.crc_failures) + len(self.validation_errors)
+                + len(self.runtime_errors) + self.dual_mismatches
+                + int(self.watchdog_tripped))
+
+
+@dataclasses.dataclass
+class GoldenImage:
+    """Immutable-segment snapshot of a compiled network.
+
+    Segment values are the ``bytes`` objects themselves — immutable, so
+    holding references *is* the snapshot; an SEU model that replaces a
+    program's segment cannot reach these."""
+
+    segments: List[Dict[str, bytes]]    # per layer
+    crcs: List[Dict[str, int]]
+
+
+def capture_golden(net) -> GoldenImage:
+    """Snapshot the immutable segments of every layer.
+
+    Must be called on a known-good network (normally right after
+    compilation); the finalize-time CRCs are cross-checked against the
+    bytes so corruption that happened *before* the capture is refused
+    rather than baked in."""
+    segments: List[Dict[str, bytes]] = []
+    crcs: List[Dict[str, int]] = []
+    for layer in net.layers:
+        prog = layer.program
+        segs = {name: prog.segments[name] for name in IMMUTABLE_SEGMENTS
+                if name in prog.segments}
+        layer_crcs = {}
+        for name, data in segs.items():
+            crc = zlib.crc32(data)
+            ref = prog.segment_crcs.get(name)
+            if ref is not None and ref != crc:
+                raise ValueError(
+                    f"layer {prog.name!r} segment {name!r} does not match "
+                    f"its finalize()-time CRC — refusing to snapshot a "
+                    f"corrupted program")
+            layer_crcs[name] = crc
+        segments.append(segs)
+        crcs.append(layer_crcs)
+    return GoldenImage(segments=segments, crcs=crcs)
+
+
+def golden_of(net) -> GoldenImage:
+    """The network's cached golden snapshot (captured on first use)."""
+    golden = getattr(net, "_harden_golden", None)
+    if golden is None:
+        golden = capture_golden(net)
+        net._harden_golden = golden
+    return golden
+
+
+def verify_network(net, golden: GoldenImage) -> List[str]:
+    """CRC-check every immutable segment; returns ``layer:segment``
+    labels of the mismatches (empty = clean)."""
+    bad: List[str] = []
+    for k, layer in enumerate(net.layers):
+        prog = layer.program
+        for name, crc in golden.crcs[k].items():
+            data = prog.segments.get(name)
+            if data is None or zlib.crc32(data) != crc:
+                bad.append(f"{prog.name}:{name}")
+    return bad
+
+
+def restore_network(net, golden: GoldenImage,
+                    layers: Optional[List[int]] = None) -> int:
+    """Re-stage immutable segments from the golden snapshot and re-decode
+    each restored layer's instruction stream from the golden ``insn``
+    bytes (field-level corruption lives in the decoded objects, so the
+    bytes alone are not enough).  Returns the number of layers touched."""
+    touched = 0
+    ks = range(len(net.layers)) if layers is None else layers
+    for k in ks:
+        prog = net.layers[k].program
+        for name, data in golden.segments[k].items():
+            prog.segments[name] = data
+            prog.segment_crcs[name] = golden.crcs[k][name]
+        if "insn" in golden.segments[k]:
+            prog.instructions = isa.decode_stream(golden.segments[k]["insn"])
+            invalidate_plan(prog)
+        touched += 1
+    return touched
+
+
+# ---------------------------------------------------------------------------
+# Instruction-stream validation
+# ---------------------------------------------------------------------------
+
+def _reject(prog, constraint: str, msg: str) -> None:
+    raise CompileError(msg, layer=prog.name, constraint=constraint)
+
+
+def _regions_by_kind(prog) -> Dict[str, List[Tuple[int, int]]]:
+    """kind -> [(start_byte, end_byte)] in image coordinates."""
+    by_kind: Dict[str, List[Tuple[int, int]]] = {}
+    off = prog.allocator.offset
+    for region in prog.regions.values():
+        start = region.phys_addr - off
+        by_kind.setdefault(region.kind, []).append(
+            (start, start + region.nbytes))
+    return by_kind
+
+
+def _contained(spans: List[Tuple[int, int]], start: int, end: int) -> bool:
+    return any(start >= lo and end <= hi for lo, hi in spans)
+
+
+def _decode_uop_words(raw: bytes) -> np.ndarray:
+    words = np.frombuffer(raw, dtype="<u4").astype(np.int64)
+    return np.stack([words & 0x7FF, (words >> 11) & 0x7FF,
+                     (words >> 22) & 0x3FF], axis=1)
+
+
+def _check_mem(prog, cfg, idx: int, m: isa.MemInsn, image_size: int,
+               by_kind: Dict[str, List[Tuple[int, int]]],
+               uop_model: np.ndarray) -> None:
+    kind = {isa.MemId.UOP: "uop", isa.MemId.INP: "inp", isa.MemId.WGT: "wgt",
+            isa.MemId.ACC: "acc", isa.MemId.OUT: "out"}[m.memory_type]
+    is_load = m.opcode == isa.Opcode.LOAD
+    verb = "load" if is_load else "store"
+    if not is_load and m.memory_type != isa.MemId.OUT:
+        _reject(prog, "store-memtype",
+                f"insn {idx}: STORE {kind.upper()} — only STORE OUT is a "
+                f"valid VTA instruction")
+    cap = cfg.buffer_capacity(kind)
+    if is_load:
+        row_w = m.x_pad_0 + m.x_size + m.x_pad_1
+        span = (m.y_pad_0 + m.y_size + m.y_pad_1) * row_w
+    else:
+        span = m.y_size * m.x_size
+    if span and m.sram_base + span > cap:
+        _reject(prog, f"{verb}-sram-bounds",
+                f"insn {idx}: {verb.upper()} {kind.upper()} SRAM span "
+                f"[{m.sram_base}, {m.sram_base + span}) exceeds capacity "
+                f"{cap}")
+    if span > MAX_INSN_FOOTPRINT:
+        _reject(prog, "lattice-footprint",
+                f"insn {idx}: {verb.upper()} moves {span} structures")
+    if m.y_size and m.x_size:
+        nbytes = cfg.elem_bytes(kind)
+        start = m.dram_base * nbytes
+        end = (m.dram_base + (m.y_size - 1) * m.x_stride + m.x_size) * nbytes
+        if end > image_size or start < 0:
+            _reject(prog, f"{verb}-dram-bounds",
+                    f"insn {idx}: {verb.upper()} {kind.upper()} DRAM span "
+                    f"[{start}, {end}) exceeds image of {image_size} bytes")
+        if not _contained(by_kind.get(kind, []), start, end):
+            _reject(prog, f"{verb}-region-containment",
+                    f"insn {idx}: {verb.upper()} {kind.upper()} DRAM span "
+                    f"[{start}, {end}) strays outside the program's "
+                    f"{kind.upper()} regions")
+        if is_load and m.memory_type == isa.MemId.UOP:
+            # advance the symbolic UOP-buffer model from the segment bytes
+            raw = prog.segments.get("uop", b"")
+            region = prog.regions["uop"]
+            base = (region.phys_addr - prog.allocator.offset) // nbytes
+            row_w_l = m.x_pad_0 + m.x_size + m.x_pad_1
+            for y in range(m.y_size):
+                lo = (m.dram_base + y * m.x_stride - base) * nbytes
+                rows = _decode_uop_words(raw[lo:lo + m.x_size * nbytes])
+                dst = (m.sram_base + (m.y_pad_0 + y) * row_w_l + m.x_pad_0)
+                uop_model[dst:dst + len(rows)] = rows
+
+
+def _check_tensor(prog, cfg, idx: int, t, uop_model: np.ndarray) -> None:
+    is_alu = isinstance(t, isa.AluInsn)
+    what = "ALU" if is_alu else "GEMM"
+    if t.uop_end > uop_model.shape[0]:
+        _reject(prog, "uop-range",
+                f"insn {idx}: {what} uop range [{t.uop_bgn}, {t.uop_end}) "
+                f"exceeds UOP buffer capacity {uop_model.shape[0]}")
+    n_uop = max(0, t.uop_end - t.uop_bgn)
+    lattice = t.iter_out * t.iter_in * n_uop
+    if lattice > MAX_INSN_FOOTPRINT:
+        _reject(prog, "lattice-footprint",
+                f"insn {idx}: {what} lattice of {lattice} points exceeds "
+                f"the static ceiling {MAX_INSN_FOOTPRINT}")
+    if n_uop == 0 or t.iter_out <= 0 or t.iter_in <= 0:
+        return
+    uops = uop_model[t.uop_bgn:t.uop_end]
+    acc_cap = cfg.acc_buff_vectors
+
+    def _max_idx(f_out: int, f_in: int, col: int) -> int:
+        return ((t.iter_out - 1) * f_out + (t.iter_in - 1) * f_in
+                + int(uops[:, col].max()))
+
+    if is_alu:
+        hi = _max_idx(t.dst_factor_out, t.dst_factor_in, 0)
+        if hi >= acc_cap:
+            _reject(prog, "alu-acc-dst-bounds",
+                    f"insn {idx}: ALU ACC dst index {hi} >= capacity "
+                    f"{acc_cap}")
+        if not t.use_imm:
+            hi = _max_idx(t.src_factor_out, t.src_factor_in, 1)
+            if hi >= acc_cap:
+                _reject(prog, "alu-acc-src-bounds",
+                        f"insn {idx}: ALU ACC src index {hi} >= capacity "
+                        f"{acc_cap}")
+        return
+    hi = _max_idx(t.acc_factor_out, t.acc_factor_in, 0)
+    if hi >= acc_cap:
+        _reject(prog, "gemm-acc-bounds",
+                f"insn {idx}: GEMM ACC index {hi} >= capacity {acc_cap}")
+    if not t.reset:
+        hi = _max_idx(t.inp_factor_out, t.inp_factor_in, 1)
+        if hi >= cfg.inp_buff_vectors:
+            _reject(prog, "gemm-inp-bounds",
+                    f"insn {idx}: GEMM INP index {hi} >= capacity "
+                    f"{cfg.inp_buff_vectors}")
+        hi = _max_idx(t.wgt_factor_out, t.wgt_factor_in, 2)
+        if hi >= cfg.wgt_buff_matrices:
+            _reject(prog, "gemm-wgt-bounds",
+                    f"insn {idx}: GEMM WGT index {hi} >= capacity "
+                    f"{cfg.wgt_buff_matrices}")
+
+
+def validate_program(prog) -> None:
+    """Pre-execution instruction-stream validation.
+
+    Raises a typed :class:`CompileError` (machine-greppable ``constraint``
+    ids) on the first violation; returning means the stream round-trips
+    to its segment bytes, stays inside every SRAM/DRAM bound of the
+    :class:`VTAConfig`, keeps its loop footprint under the static
+    ceiling, terminates with FINISH, and balances its §2.3 dependency
+    tokens."""
+    cfg = prog.config
+    insns = prog.instructions
+    # 1. decode→re-encode round-trip against the fetched bytes: catches
+    #    any field-level divergence between host objects and device bytes.
+    #    This check always runs — it is the only detector for mutations
+    #    of the decoded objects themselves.
+    seg = prog.segments.get("insn")
+    if seg is not None:
+        try:
+            encoded = isa.encode_stream(insns)
+        except (ValueError, TypeError) as e:
+            _reject(prog, "insn-roundtrip",
+                    f"instruction stream does not re-encode: {e}")
+        if encoded != seg:
+            _reject(prog, "insn-roundtrip",
+                    "re-encoded instruction stream differs from the insn "
+                    "segment bytes")
+        # The static checks below depend only on the insn/uop byte content,
+        # and the round-trip just proved the stream matches ``seg`` — both
+        # are immutable bytes objects that restore_network re-installs *by
+        # reference*.  Identity-match means the checks would repeat
+        # verbatim: skip them (the round-trip above still ran).
+        cached = getattr(prog, "_harden_validated_segs", None)
+        if (cached is not None and cached[0] is seg
+                and cached[1] is prog.segments.get("uop")):
+            return
+    # 2. termination
+    if not insns or not isinstance(insns[-1], isa.FinishInsn):
+        _reject(prog, "finish-missing",
+                "instruction stream does not end with FINISH")
+    # 3. per-instruction static checks with a symbolic UOP-buffer model
+    image_size = prog.allocator.image_size()
+    by_kind = _regions_by_kind(prog)
+    uop_model = np.zeros((cfg.uop_buff_entries, 3), dtype=np.int64)
+    for idx, insn in enumerate(insns):
+        if isinstance(insn, isa.MemInsn):
+            _check_mem(prog, cfg, idx, insn, image_size, by_kind, uop_model)
+        elif isinstance(insn, (isa.GemInsn, isa.AluInsn)):
+            _check_tensor(prog, cfg, idx, insn, uop_model)
+    # 4. §2.3 dependency-token balance (a corrupted dep flag deadlocks
+    #    real hardware; here the static queue simulation catches it)
+    tokens = TokenQueues()
+    try:
+        for insn in insns:
+            tokens.pre(insn)
+            tokens.post(insn)
+            if isinstance(insn, isa.FinishInsn):
+                break
+    except VTAHazardError as e:
+        _reject(prog, "dep-token-hazard", str(e))
+    if seg is not None:
+        prog._harden_validated_segs = (seg, prog.segments.get("uop"))
+
+
+def validate_network(net) -> List[str]:
+    """Validate every layer; returns the error strings (empty = clean)."""
+    errors: List[str] = []
+    for layer in net.layers:
+        try:
+            validate_program(layer.program)
+        except CompileError as e:
+            errors.append(str(e))
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# Guarded serving
+# ---------------------------------------------------------------------------
+
+def _wrap_hook(fault_hook: Optional[Callable],
+               watchdog: Optional[Watchdog]) -> Optional[Callable]:
+    """Compose the user/injection hook with the watchdog deadline check —
+    one hook slot serves both (checked at every instruction boundary)."""
+    if watchdog is None:
+        return fault_hook
+
+    def hook(sim, layer_idx: int, insn_idx: int) -> None:
+        watchdog.check()
+        if fault_hook is not None:
+            fault_hook(sim, layer_idx, insn_idx)
+
+    return hook
+
+
+_SERVE_FAULTS = (VTAHazardError, CompileError, WatchdogTimeout,
+                 ValueError, IndexError)
+
+
+def _precheck(net, golden: GoldenImage, policy: GuardPolicy,
+              report: GuardReport) -> bool:
+    """Pre-serve CRC + validation with restore on detection.  Returns
+    False when the network could not be brought to a valid state."""
+    if policy.verify_crc:
+        bad = verify_network(net, golden)
+        if bad:
+            report.crc_failures.extend(bad)
+            report.restored_layers += restore_network(net, golden)
+    if policy.validate_instructions:
+        errors = validate_network(net)
+        if errors:
+            report.validation_errors.extend(errors)
+            report.restored_layers += restore_network(net, golden)
+            if validate_network(net):
+                return False       # golden image itself does not validate
+    return True
+
+
+def _finish(report: GuardReport, sim_reports=None) -> None:
+    if sim_reports:
+        report.acc_overflow_lanes = sum(r.acc_overflow_lanes
+                                        for r in sim_reports)
+        report.acc_saturation_lanes = sum(r.acc_saturation_lanes
+                                          for r in sim_reports)
+    report.outcome = "clean" if report.detections == 0 else "recovered"
+
+
+def guarded_serve_one(net, image, policy: GuardPolicy, *,
+                      backend: str = "fast", fault_hook=None
+                      ) -> Tuple[Optional[np.ndarray], GuardReport]:
+    """One request through the full guard stack; returns
+    ``(output, GuardReport)`` with ``output=None`` on unrecoverable
+    corruption — never a silently wrong result."""
+    golden = golden_of(net)
+    report = GuardReport()
+    watchdog = Watchdog(policy.deadline_s) if policy.deadline_s else None
+    try:
+        for attempt in range(policy.max_retries + 1):
+            report.retries = attempt
+            if not _precheck(net, golden, policy, report):
+                break
+            hook = _wrap_hook(fault_hook, watchdog)
+            try:
+                if watchdog:
+                    watchdog.arm()
+                out = net.serve_one(image, backend=backend, fault_hook=hook,
+                                    count_overflows=policy.count_overflows)
+            except WatchdogTimeout as e:
+                report.watchdog_tripped = True
+                report.runtime_errors.append(str(e))
+                report.restored_layers += restore_network(net, golden)
+                continue
+            except _SERVE_FAULTS as e:
+                report.runtime_errors.append(f"{type(e).__name__}: {e}")
+                report.restored_layers += restore_network(net, golden)
+                continue
+            finally:
+                if watchdog:
+                    watchdog.disarm()
+            if policy.verify_crc:
+                bad = verify_network(net, golden)
+                if bad:
+                    report.crc_failures.extend(bad)
+                    report.restored_layers += restore_network(net, golden)
+                    continue
+            if policy.dual_execute:
+                # clean shadow run (no injection hook): a transient that
+                # corrupted the primary in flight cannot repeat, so any
+                # bitwise divergence is a detection
+                shadow = net.serve_one(image, backend=policy.dual_backend)
+                if not np.array_equal(out, shadow):
+                    report.dual_mismatches += 1
+                    report.restored_layers += restore_network(net, golden)
+                    continue
+            _finish(report)
+            return out, report
+        report.outcome = "failed"
+        return None, report
+    finally:
+        if watchdog:
+            watchdog.stop()
+
+
+def guarded_serve(net, images, policy: GuardPolicy, *, fault_hook=None):
+    """Batched guarded serving: ``(outputs, sim_reports, guard_reports)``
+    with one :class:`GuardReport` per request.  CRC/validation detections
+    are batch-level (one program image serves every request); the
+    dual-execution bit-compare is per request."""
+    golden = golden_of(net)
+    batch_report = GuardReport()
+    watchdog = Watchdog(policy.deadline_s) if policy.deadline_s else None
+    try:
+        for attempt in range(policy.max_retries + 1):
+            batch_report.retries = attempt
+            if not _precheck(net, golden, policy, batch_report):
+                break
+            hook = _wrap_hook(fault_hook, watchdog)
+            try:
+                if watchdog:
+                    watchdog.arm()
+                outs, sim_reports = net.serve(
+                    images, fault_hook=hook,
+                    count_overflows=policy.count_overflows)
+            except WatchdogTimeout as e:
+                batch_report.watchdog_tripped = True
+                batch_report.runtime_errors.append(str(e))
+                batch_report.restored_layers += restore_network(net, golden)
+                continue
+            except _SERVE_FAULTS as e:
+                batch_report.runtime_errors.append(
+                    f"{type(e).__name__}: {e}")
+                batch_report.restored_layers += restore_network(net, golden)
+                continue
+            finally:
+                if watchdog:
+                    watchdog.disarm()
+            if policy.verify_crc:
+                bad = verify_network(net, golden)
+                if bad:
+                    batch_report.crc_failures.extend(bad)
+                    batch_report.restored_layers += restore_network(net,
+                                                                    golden)
+                    continue
+            mism: List[int] = []
+            if policy.dual_execute:
+                shadow, _ = net.serve(images)
+                mism = [i for i in range(len(outs))
+                        if not np.array_equal(outs[i], shadow[i])]
+                if mism:
+                    batch_report.dual_mismatches += len(mism)
+                    batch_report.restored_layers += restore_network(net,
+                                                                    golden)
+                    continue
+            _finish(batch_report, sim_reports)
+            reports = [dataclasses.replace(batch_report) for _ in outs]
+            return outs, sim_reports, reports
+        batch_report.outcome = "failed"
+        n = len(net._as_image_list(images))
+        return None, [], [dataclasses.replace(batch_report)
+                          for _ in range(n)]
+    finally:
+        if watchdog:
+            watchdog.stop()
+
+
+__all__ = ["IMMUTABLE_SEGMENTS", "MAX_INSN_FOOTPRINT", "GoldenImage",
+           "GuardPolicy", "GuardReport", "Watchdog", "WatchdogTimeout",
+           "capture_golden", "golden_of", "guarded_serve",
+           "guarded_serve_one", "restore_network", "validate_network",
+           "validate_program", "verify_network"]

@@ -1,0 +1,321 @@
+"""Negative-path suite: corrupted instructions must be *rejected or
+flagged* — never silently produce wrong output (DESIGN.md §Hardening).
+
+Two attack surfaces:
+
+* **Field flips** — every integer/flag field of every instruction kind
+  (LOAD, STORE, GEMM, ALU, FINISH) is mutated on a real compiled
+  program.  Because the VTA wire format packs disjoint bit fields, any
+  in-width value change alters the 16-byte encoding, so the validator's
+  decode→re-encode round-trip must reject every single one.  The field
+  universes mirror ``test_isa_roundtrip.py``; the encodings those tests
+  pin as golden hex are what makes this argument sound.
+* **Out-of-bounds execution** — the satellite audit of the simulators'
+  silent-wraparound paths: pad spans past SRAM end (previously clipped
+  without complaint by the fast backends), DRAM overruns (previously a
+  context-free IndexError or numpy broadcast error after partial
+  mutation), GEMM/ALU lattice overruns, and STORE UOP.  All three
+  backends must now raise the typed :class:`VTABoundsError` /
+  ``ValueError`` *before* mutating simulator state, and the validator
+  must reject the same streams statically with stable constraint ids.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.core.errors import CompileError
+from repro.core.fast_simulator import (BatchFastSimulator, FastSimulator,
+                                       invalidate_plan)
+from repro.core.gemm_compiler import AluImmOp, compile_matmul
+from repro.core.simulator import (FunctionalSimulator, VTABoundsError,
+                                  VTAHazardError)
+from repro.harden.guards import validate_program
+
+# (field, max value) universes per instruction kind — the bit widths of
+# the VTA hw_spec layout, as pinned by test_isa_roundtrip golden bytes.
+MEM_FIELDS = [("sram_base", 2**16 - 1), ("dram_base", 2**32 - 1),
+              ("y_size", 2**16 - 1), ("x_size", 2**16 - 1),
+              ("x_stride", 2**16 - 1), ("y_pad_0", 15), ("y_pad_1", 15),
+              ("x_pad_0", 15), ("x_pad_1", 15)]
+GEM_FIELDS = [("reset", 1), ("uop_bgn", 2**13 - 1), ("uop_end", 2**14 - 1),
+              ("iter_out", 2**14 - 1), ("iter_in", 2**14 - 1),
+              ("acc_factor_out", 2**11 - 1), ("acc_factor_in", 2**11 - 1),
+              ("inp_factor_out", 2**11 - 1), ("inp_factor_in", 2**11 - 1),
+              ("wgt_factor_out", 2**10 - 1), ("wgt_factor_in", 2**10 - 1)]
+ALU_FIELDS = [("reset", 1), ("uop_bgn", 2**13 - 1), ("uop_end", 2**14 - 1),
+              ("iter_out", 2**14 - 1), ("iter_in", 2**14 - 1),
+              ("dst_factor_out", 2**11 - 1), ("dst_factor_in", 2**11 - 1),
+              ("src_factor_out", 2**11 - 1), ("src_factor_in", 2**11 - 1),
+              ("alu_opcode", 3), ("use_imm", 1), ("imm", 2**15 - 1)]
+DEP_FIELDS = ["pop_prev", "pop_next", "push_prev", "push_next"]
+
+KIND_FIELDS = {
+    "load": MEM_FIELDS, "store": MEM_FIELDS,
+    "gemm": GEM_FIELDS, "alu": ALU_FIELDS, "finish": [],
+}
+
+
+def _program():
+    rng = np.random.default_rng(5)
+    A = rng.integers(-128, 128, (12, 24)).astype(np.int8)
+    B = rng.integers(-128, 128, (24, 12)).astype(np.int8)
+    return compile_matmul(A, B, alu_ops=[AluImmOp.relu()])
+
+
+def _find(prog, kind):
+    for insn in prog.instructions:
+        if kind == "load" and isinstance(insn, isa.MemInsn) \
+                and insn.opcode == isa.Opcode.LOAD:
+            return insn
+        if kind == "store" and isinstance(insn, isa.MemInsn) \
+                and insn.opcode == isa.Opcode.STORE:
+            return insn
+        if kind == "gemm" and isinstance(insn, isa.GemInsn):
+            return insn
+        if kind == "alu" and isinstance(insn, isa.AluInsn):
+            return insn
+        if kind == "finish" and isinstance(insn, isa.FinishInsn):
+            return insn
+    raise AssertionError(f"no {kind} instruction in program")
+
+
+# ---------------------------------------------------------------------------
+# Field flips: every field of every instruction kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(KIND_FIELDS))
+def test_every_field_flip_is_rejected(kind):
+    """Flip each field of one live instruction of ``kind`` — the
+    round-trip validator must reject every mutation (segment bytes are
+    the truth; the decoded object no longer matches them)."""
+    for field, fmax in KIND_FIELDS[kind]:
+        prog = _program()
+        insn = _find(prog, kind)
+        old = getattr(insn, field)
+        setattr(insn, field, old + 1 if old < fmax else old - 1)
+        with pytest.raises(CompileError) as exc:
+            validate_program(prog)
+        assert exc.value.constraint == "insn-roundtrip", (kind, field)
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_FIELDS))
+@pytest.mark.parametrize("dep", DEP_FIELDS)
+def test_every_dep_flag_flip_is_rejected(kind, dep):
+    """Dependency-token flags are one bit each; a flipped flag deadlocks
+    real hardware, so the validator must catch it statically."""
+    prog = _program()
+    insn = _find(prog, kind)
+    setattr(insn.dep, dep, 1 - getattr(insn.dep, dep))
+    with pytest.raises(CompileError) as exc:
+        validate_program(prog)
+    assert exc.value.constraint == "insn-roundtrip", (kind, dep)
+
+
+def test_corrupted_stream_never_serves_wrong_output():
+    """End to end: after any field flip, a guarded serve returns the
+    golden output (recovered) — the flagged stream never executes."""
+    from repro.core.network_compiler import compile_network
+    from repro.harden import GuardPolicy
+    from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                    synthetic_digit)
+    net = compile_network(lenet5_specs(lenet5_random_weights(0)),
+                          synthetic_digit(0))
+    img = synthetic_digit(3)
+    golden = net.serve_one(img)
+    for field in ("x_size", "sram_base", "dram_base"):
+        insn = _find(net.layers[1].program, "load")
+        setattr(insn, field, getattr(insn, field) + 1)
+        invalidate_plan(net.layers[1].program)
+        out, rep = net.serve_one(img, guard=GuardPolicy())
+        assert rep.outcome == "recovered" and rep.validation_errors
+        np.testing.assert_array_equal(out, golden)
+
+
+# ---------------------------------------------------------------------------
+# Structural validator rejections (stable constraint ids)
+# ---------------------------------------------------------------------------
+
+def _resync(prog):
+    """Re-encode the mutated stream into the segment so the round-trip
+    passes and the *structural* checks are what rejects."""
+    prog.segments["insn"] = isa.encode_stream(prog.instructions)
+    prog._harden_validated_segs = None
+
+
+def _expect(prog, constraint):
+    with pytest.raises(CompileError) as exc:
+        validate_program(prog)
+    assert exc.value.constraint == constraint, exc.value
+
+
+def test_validator_rejects_missing_finish():
+    prog = _program()
+    prog.instructions = prog.instructions[:-1]
+    _resync(prog)
+    _expect(prog, "finish-missing")
+
+
+def test_validator_rejects_store_of_non_out():
+    prog = _program()
+    store = _find(prog, "store")
+    store.memory_type = isa.MemId.UOP
+    _resync(prog)
+    _expect(prog, "store-memtype")
+
+
+def test_validator_rejects_sram_overrun():
+    prog = _program()
+    load = _find(prog, "load")
+    load.sram_base = prog.config.buffer_capacity(
+        {isa.MemId.UOP: "uop", isa.MemId.INP: "inp", isa.MemId.WGT: "wgt",
+         isa.MemId.ACC: "acc", isa.MemId.OUT: "out"}[load.memory_type]) - 1
+    _resync(prog)
+    _expect(prog, "load-sram-bounds")
+
+
+def test_validator_rejects_dram_overrun():
+    prog = _program()
+    load = _find(prog, "load")
+    load.dram_base = 2**31          # far past the image
+    _resync(prog)
+    _expect(prog, "load-dram-bounds")
+
+
+def test_validator_rejects_region_straying():
+    """A DRAM access inside the image but outside the operand's own
+    region — reading another tensor's bytes — is corruption the bounds
+    check alone cannot see."""
+    prog = _program()
+    load = _find(prog, "load")
+    load.dram_base = load.dram_base + 2     # shifted off its region
+    _resync(prog)
+    with pytest.raises(CompileError) as exc:
+        validate_program(prog)
+    assert exc.value.constraint in ("load-region-containment",
+                                    "load-dram-bounds")
+
+
+def test_validator_rejects_lattice_bomb():
+    prog = _program()
+    gem = _find(prog, "gemm")
+    gem.iter_out = 2**14 - 1
+    gem.iter_in = 2**14 - 1
+    _resync(prog)
+    _expect(prog, "lattice-footprint")
+
+
+def test_validator_rejects_uop_range_overrun():
+    prog = _program()
+    gem = _find(prog, "gemm")
+    gem.uop_end = prog.config.uop_buff_entries + 7
+    _resync(prog)
+    _expect(prog, "uop-range")
+
+
+def test_validator_rejects_gemm_acc_overrun():
+    prog = _program()
+    gem = _find(prog, "gemm")
+    gem.acc_factor_out = 2**11 - 1
+    gem.iter_out = max(gem.iter_out, 8)
+    _resync(prog)
+    _expect(prog, "gemm-acc-bounds")
+
+
+def test_validator_rejects_dep_token_deadlock():
+    prog = _program()
+    first = prog.instructions[0]
+    first.dep.pop_prev = 1          # pops a token nobody pushed
+    _resync(prog)
+    _expect(prog, "dep-token-hazard")
+
+
+# ---------------------------------------------------------------------------
+# Satellite audit: typed pre-mutation OOB errors in all three backends
+# ---------------------------------------------------------------------------
+
+def _backends(prog):
+    image = prog.dram_image()
+    yield "oracle", FunctionalSimulator(prog.config, image.copy())
+    yield "fast", FastSimulator(prog.config, image.copy())
+    yield "batched", BatchFastSimulator(
+        prog.config, np.stack([image, image.copy()]))
+
+
+def _mutated(field, value, kind="load"):
+    prog = _program()
+    insn = _find(prog, kind)
+    setattr(insn, field, value)
+    invalidate_plan(prog)
+    return prog
+
+
+def test_load_pad_past_sram_end_raises_everywhere():
+    """Regression for the silent pad-clip: the fast backends used to drop
+    padding rows past the SRAM end without complaint, silently diverging
+    from the oracle."""
+    kinds = {isa.MemId.UOP: "uop", isa.MemId.INP: "inp",
+             isa.MemId.WGT: "wgt", isa.MemId.ACC: "acc",
+             isa.MemId.OUT: "out"}
+    for name, sim in _backends(_program()):
+        prog = _program()
+        load = _find(prog, "load")
+        cap = prog.config.buffer_capacity(kinds[load.memory_type])
+        load.sram_base = cap - 1                # pad rows spill past cap
+        load.y_pad_1 = 4
+        invalidate_plan(prog)
+        with pytest.raises(VTABoundsError, match="padding|span|capacity"):
+            sim.run(prog.instructions)
+
+
+def test_load_dram_overrun_raises_typed_everywhere():
+    """Previously a bare IndexError (oracle) or an opaque numpy broadcast
+    ValueError (batched) after partial state mutation."""
+    for name, sim in _backends(_program()):
+        prog = _mutated("dram_base", 2**28)
+        with pytest.raises(VTABoundsError, match="DRAM"):
+            sim.run(prog.instructions)
+
+
+def test_gemm_lattice_overrun_raises_pre_mutation():
+    for name, sim in _backends(_program()):
+        prog = _mutated("acc_factor_out", 2**11 - 1, kind="gemm")
+        gem = _find(prog, "gemm")
+        gem.iter_out = max(gem.iter_out, 8)
+        invalidate_plan(prog)
+        acc_before = sim.acc_buf.copy()
+        with pytest.raises((VTABoundsError, VTAHazardError)):
+            sim.run(prog.instructions)
+        # the GEMM must not have partially committed
+        np.testing.assert_array_equal(sim.acc_buf, acc_before)
+
+
+def test_alu_lattice_overrun_raises_everywhere():
+    for name, sim in _backends(_program()):
+        prog = _mutated("dst_factor_out", 2**11 - 1, kind="alu")
+        alu = _find(prog, "alu")
+        alu.iter_out = max(alu.iter_out, 8)
+        invalidate_plan(prog)
+        with pytest.raises(VTABoundsError):
+            sim.run(prog.instructions)
+
+
+def test_store_uop_rejected_everywhere():
+    """STORE UOP is not a VTA instruction; the oracle used to die on a
+    numpy broadcast error deep in the copy loop."""
+    for name, sim in _backends(_program()):
+        prog = _program()
+        store = _find(prog, "store")
+        store.memory_type = isa.MemId.UOP
+        invalidate_plan(prog)
+        with pytest.raises(ValueError, match="STORE UOP"):
+            sim.run(prog.instructions)
+
+
+def test_uop_range_overrun_raises_everywhere():
+    for name, sim in _backends(_program()):
+        # past the 8192-entry UOP buffer itself, not just past the
+        # program's own uop segment (zeros in between decode in-bounds)
+        prog = _mutated("uop_end", 2**14 - 1, kind="gemm")
+        with pytest.raises((VTABoundsError, VTAHazardError)):
+            sim.run(prog.instructions)
