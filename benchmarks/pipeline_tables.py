@@ -1,0 +1,104 @@
+"""Pipeline-schedule benchmarks — serialized vs double-buffered
+(DESIGN.md §Pipeline, EXPERIMENTS.md §Pipeline).
+
+For lenet5 and resnet8 the same network is compiled twice — once with
+``schedule="serialized"`` (the paper's one-chunk-at-a-time token chain)
+and once with ``schedule="pipelined"`` (double-buffered LOAD/GEMM with
+store overlap) — and both instruction streams are swept through the
+three-module concurrent cycle model.  The rows report per-module busy
+cycles, the concurrent makespan, the serialized-vs-pipelined execution
+time at the 650 MHz paper clock, and the headline reduction.
+
+The ``pipeline/resnet8/makespan_reduction_ge_15pct`` row is the PR's
+acceptance gate: it must read ``yes`` (pipelining buys at least a 15 %
+makespan reduction on resnet8) and is checked bit-for-bit by
+``benchmarks.run`` via ``EXACT_ROWS``.
+
+``collect()`` returns the measurements as a JSON-ready dict;
+``benchmarks.run`` writes it to ``BENCH_pipeline.json``.  Every row
+name starts with ``pipeline/`` so ``benchmarks.run --only pipeline/``
+runs exactly this table (the CI smoke step).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import cycle_model
+
+SCHEDULES = ("serialized", "pipelined")
+
+
+def _lenet_programs(schedule: str):
+    from repro.models.lenet import (
+        lenet5_random_weights, lenet5_specs, synthetic_digit)
+    from repro.core.network_compiler import compile_network
+    net = compile_network(lenet5_specs(lenet5_random_weights()),
+                          synthetic_digit(0), schedule=schedule)
+    return [layer.program for layer in net.layers]
+
+
+def _resnet8_programs(schedule: str):
+    from repro.models.resnet8 import compile_resnet8
+    net, _graph = compile_resnet8(schedule=schedule)
+    return [layer.program for layer in net.layers]
+
+
+_WORKLOADS = (("lenet5", _lenet_programs), ("resnet8", _resnet8_programs))
+
+
+def _measure(build, schedule: str) -> Dict:
+    t0 = time.perf_counter()
+    programs = build(schedule)
+    compile_s = time.perf_counter() - t0
+    rep = cycle_model.simulate_programs(programs)
+    exec_us = rep.makespan_cycles / cycle_model.FPGA_CLOCK_HZ * 1e6
+    return {
+        "schedule": schedule,
+        "compile_wall_s": round(compile_s, 3),
+        "schedules_used": sorted({p.schedule for p in programs}),
+        "makespan_cycles": rep.makespan_cycles,
+        "busy_cycles": dict(rep.busy_cycles),
+        "wait_cycles": dict(rep.wait_cycles),
+        "total_busy_cycles": rep.total_busy_cycles,
+        "exec_us_at_650mhz": round(exec_us, 2),
+    }
+
+
+def collect() -> Dict:
+    """One measurement pass → the shared dict behind the CSV rows and
+    the ``BENCH_pipeline.json`` artifact."""
+    data: Dict = {"workloads": {}}
+    for name, build in _WORKLOADS:
+        per = {s: _measure(build, s) for s in SCHEDULES}
+        serial = per["serialized"]["makespan_cycles"]
+        piped = per["pipelined"]["makespan_cycles"]
+        per["makespan_reduction_pct"] = round(100.0 * (1 - piped / serial), 1)
+        data["workloads"][name] = per
+    r8 = data["workloads"]["resnet8"]
+    data["resnet8_reduction_ge_15pct"] = (
+        "yes" if r8["makespan_reduction_pct"] >= 15.0 else "no")
+    return data
+
+
+def all_tables(data: Dict = None) -> List[Dict]:
+    data = data or collect()
+    rows: List[Dict] = []
+    for name, per in data["workloads"].items():
+        for sched in SCHEDULES:
+            m = per[sched]
+            for module in cycle_model.MODULES:
+                rows.append({
+                    "name": f"pipeline/{name}/{sched}/busy/{module}",
+                    "value": m["busy_cycles"].get(module, 0), "paper": None})
+            rows.append({"name": f"pipeline/{name}/{sched}/makespan_cycles",
+                         "value": m["makespan_cycles"], "paper": None})
+            rows.append({"name": f"pipeline/{name}/{sched}/exec_us@650MHz",
+                         "value": m["exec_us_at_650mhz"], "paper": None})
+        rows.append({"name": f"pipeline/{name}/makespan_reduction_pct",
+                     "value": per["makespan_reduction_pct"], "paper": None})
+    rows.append({"name": "pipeline/resnet8/makespan_reduction_ge_15pct",
+                 "value": data["resnet8_reduction_ge_15pct"],
+                 "paper": "yes"})
+    return rows

@@ -76,6 +76,14 @@ def _faults_rows():
     return fault_campaign.all_tables(data)
 
 
+def _pipeline_rows():
+    from benchmarks import pipeline_tables
+    data = pipeline_tables.collect()
+    pathlib.Path("BENCH_pipeline.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return pipeline_tables.all_tables(data)
+
+
 def _roofline_rows():
     # roofline summary (prefer the final sweep, fall back to baseline)
     dry = pathlib.Path("experiments/final")
@@ -104,13 +112,15 @@ SECTIONS = (
     ("serving", ("serve/",), _serving_rows),
     ("kernels", ("kernel/", "pallas/", "xla/", "hlo/"), _kernel_rows),
     ("faults", ("faults/",), _faults_rows),
+    ("pipeline", ("pipeline/",), _pipeline_rows),
     ("roofline", ("roofline/",), _roofline_rows),
 )
 
 # Rows whose paper column must match bit-for-bit (the §5 claims, plus the
 # §Hardening zero-silent-data-corruption contract).
 EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles",
-              "faults/lenet5/sdc_total", "faults/resnet8/sdc_total"}
+              "faults/lenet5/sdc_total", "faults/resnet8/sdc_total",
+              "pipeline/resnet8/makespan_reduction_ge_15pct"}
 
 
 def _section_matches(prefixes, only: str) -> bool:

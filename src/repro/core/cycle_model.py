@@ -27,12 +27,22 @@ The SIMD-CPU comparison (§5.2) follows the paper's own arithmetic: one GeMM
 loop is ``block_size² = 256`` MACs, a 16-MAC/cycle CPU therefore needs 16×
 the cycles per loop — 2972 × 16 = 47552 ("at least 47552 total cycles"),
 and matching the VTA wall-time needs a ≈ 16 × 650 MHz ≈ 10 GHz clock.
+
+Beyond the single-module §5.2 counter, :func:`simulate_pipeline` runs the
+*three-module concurrent timeline* of the VTA's task-level pipeline
+(DESIGN.md §Pipeline): the Load / Compute / Store modules each advance
+through their own instruction sub-stream at the per-instruction costs
+above, synchronised only by the §2.3 dependency tokens.  The makespan of
+that timeline — slowest module plus its token-wait stalls — is the
+hardware-honest figure the pipeline scheduler optimises for; the
+serialized token scheme reproduces the §5.2 numbers on the Compute
+module by construction (same per-instruction costs, same stream).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List
+from typing import Dict, Iterable, List
 
 from . import isa
 from .hwconfig import VTAConfig
@@ -161,3 +171,143 @@ def analyze_programs(progs: List[VTAProgram]) -> CycleReport:
     for p in progs:
         insns.extend(p.instructions)
     return analyze(insns)
+
+
+# ---------------------------------------------------------------------------
+# Three-module concurrent timeline (DESIGN.md §Pipeline)
+# ---------------------------------------------------------------------------
+
+MODULES = ("load", "compute", "store")
+
+
+def insn_cycles(insn) -> int:
+    """Modeled cycles one instruction occupies its module: 1 per GEMM/ALU
+    loop iteration or per DMA'd structure, plus ``DECODE_CYCLES`` decode —
+    the same costs that calibrate :class:`CycleReport` to §5.2, now
+    applied uniformly to the Load and Store modules too."""
+    if isinstance(insn, (isa.GemInsn, isa.AluInsn)):
+        return insn.loop_count + DECODE_CYCLES
+    if isinstance(insn, isa.MemInsn):
+        return insn.y_size * insn.x_size + DECODE_CYCLES
+    return DECODE_CYCLES            # FINISH: decode + final token pop
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """Result of the three-module concurrent timeline simulation.
+
+    ``busy_cycles[m]``  — cycles module *m* spends executing instructions;
+    ``wait_cycles[m]``  — cycles *m* sits blocked on a dependency-token
+    pop (§2.3) before an instruction may start;
+    ``finish_cycles[m]`` — the timeline instant *m* retires its last
+    instruction;
+    ``makespan_cycles`` — max over modules, i.e. slowest module + its
+    stalls — the wall-clock figure of the whole program.
+    """
+
+    busy_cycles: Dict[str, int]
+    wait_cycles: Dict[str, int]
+    finish_cycles: Dict[str, int]
+    insns: Dict[str, int]
+    makespan_cycles: int
+
+    @property
+    def total_busy_cycles(self) -> int:
+        """Sum of per-module busy cycles — the fully-serial floor a
+        token-serialized schedule degenerates to."""
+        return sum(self.busy_cycles.values())
+
+    def idle_cycles(self, module: str) -> int:
+        """Cycles ``module`` is not executing over the whole makespan
+        (token waits + tail idle after its last instruction)."""
+        return self.makespan_cycles - self.busy_cycles[module]
+
+    def execution_time_s(self, clock_hz: float = FPGA_CLOCK_HZ) -> float:
+        return self.makespan_cycles / clock_hz
+
+    def merged(self, other: "PipelineReport") -> "PipelineReport":
+        """Sequential composition: program boundaries are full barriers
+        (FINISH drains the pipeline), so busy/wait/makespan all add."""
+        add = lambda a, b: {m: a[m] + b[m] for m in MODULES}
+        return PipelineReport(
+            busy_cycles=add(self.busy_cycles, other.busy_cycles),
+            wait_cycles=add(self.wait_cycles, other.wait_cycles),
+            finish_cycles=add(self.finish_cycles, other.finish_cycles),
+            insns=add(self.insns, other.insns),
+            makespan_cycles=self.makespan_cycles + other.makespan_cycles)
+
+
+def simulate_pipeline(instructions: Iterable[object]) -> PipelineReport:
+    """Simulate the Load/Compute/Store modules running concurrently.
+
+    Each module consumes its sub-stream in order; an instruction starts at
+    ``max(module clock, arrival of every token it pops)``.  Token *k*
+    popped from a queue becomes available when the *k*-th push to that
+    queue retires (the §2.3 counters admit exactly that matching: a pop
+    can only proceed once the count has been raised *k* times).  Program
+    order is a topological order of the resulting dependency DAG, so a
+    single in-order sweep yields the exact concurrent schedule.
+
+    Raises :class:`~repro.core.simulator.VTAHazardError` when a pop has no
+    matching push anywhere earlier in the stream — the token stream would
+    deadlock real hardware.
+    """
+    from .simulator import TokenQueues, VTAHazardError, module_of
+
+    clock = {m: 0 for m in MODULES}
+    busy = {m: 0 for m in MODULES}
+    wait = {m: 0 for m in MODULES}
+    ninsn = {m: 0 for m in MODULES}
+    push_times: Dict[tuple, List[int]] = {}
+    pops_taken: Dict[tuple, int] = {}
+
+    for insn in instructions:
+        mod = module_of(insn)
+        ready = clock[mod]
+        pops = []
+        if insn.dep.pop_prev:
+            pops.append((TokenQueues._PREV[mod], mod))
+        if insn.dep.pop_next:
+            pops.append((TokenQueues._NEXT[mod], mod))
+        for src, dst in pops:
+            if src is None:
+                raise VTAHazardError(f"{dst}: pop from nonexistent neighbour")
+            q = (src, dst)
+            k = pops_taken.get(q, 0)
+            times = push_times.get(q, ())
+            if k >= len(times):
+                raise VTAHazardError(
+                    f"dependency deadlock: {dst} pop #{k + 1} from {src} "
+                    f"has no matching push in the stream")
+            ready = max(ready, times[k])
+            pops_taken[q] = k + 1
+        wait[mod] += ready - clock[mod]
+        cycles = insn_cycles(insn)
+        finish = ready + cycles
+        clock[mod] = finish
+        busy[mod] += cycles
+        ninsn[mod] += 1
+        if insn.dep.push_prev:
+            push_times.setdefault((mod, TokenQueues._PREV[mod]), []).append(
+                finish)
+        if insn.dep.push_next:
+            push_times.setdefault((mod, TokenQueues._NEXT[mod]), []).append(
+                finish)
+
+    return PipelineReport(busy_cycles=busy, wait_cycles=wait,
+                          finish_cycles=dict(clock), insns=ninsn,
+                          makespan_cycles=max(clock.values()))
+
+
+def simulate_program(prog: VTAProgram) -> PipelineReport:
+    return simulate_pipeline(prog.instructions)
+
+
+def simulate_programs(progs: List[VTAProgram]) -> PipelineReport:
+    """Network timeline: layer programs execute back-to-back, each ending
+    in a FINISH barrier, so the per-layer timelines compose by addition."""
+    reports = [simulate_program(p) for p in progs]
+    merged = reports[0]
+    for r in reports[1:]:
+        merged = merged.merged(r)
+    return merged

@@ -610,6 +610,7 @@ class FastSimulator:
             self.tokens.post(insn)
             if isinstance(step, _FinishStep):
                 break
+        self.tokens.account(self.report)
         return self.report
 
 

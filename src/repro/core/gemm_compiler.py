@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import isa
+from . import cycle_model, isa, pipeline_schedule
 from .dram import DramAllocator
 from .errors import CompileError
 from .hwconfig import VTAConfig, vta_default
@@ -149,6 +149,9 @@ class ChunkPlan:
     # ACC windows resident per chunk: 1 normally, 2 when the program holds
     # a residual operand beside the result (AluResidualOp).
     acc_copies: int = 1
+    # Planned against halved buffer budgets so loads/stores can ping-pong
+    # between buffer halves (schedule="pipelined", DESIGN.md §Pipeline).
+    double_buffer: bool = False
 
     @property
     def n_chunks(self) -> int:
@@ -201,41 +204,65 @@ def plan_chunks(cfg: VTAConfig, alpha: int, lam: int, beta: int,
                 row_height: int, *,
                 row_groups: Sequence[Tuple[int, int]] = (),
                 col_groups: Sequence[Tuple[int, int]] = (),
-                acc_copies: int = 1) -> ChunkPlan:
+                acc_copies: int = 1,
+                double_buffer: bool = False,
+                max_lam_c: Optional[int] = None,
+                max_alpha_c: Optional[int] = None) -> ChunkPlan:
     """Greedy deterministic tiling honouring every buffer capacity.
 
     ``row_groups``/``col_groups`` are inclusive block-row/block-col
     intervals that must not straddle a chunk boundary — derived from pair
     ALU programs (both ends of a pair must share one ACC window).
     ``acc_copies=2`` halves the per-chunk ACC budget so a residual operand
-    window (:class:`AluResidualOp`) fits beside the result window."""
-    acc_budget = cfg.acc_buff_vectors // acc_copies
-    lam_c = max(1, min(lam, cfg.wgt_buff_matrices,
-                       cfg.inp_buff_vectors // row_height))
-    beta_c = max(1, min(beta, cfg.wgt_buff_matrices // lam_c,
+    window (:class:`AluResidualOp`) fits beside the result window.
+
+    ``double_buffer`` halves every buffer budget again (INP/WGT per load
+    group, ACC per chunk) and reserves a second pinned UOP slot so the
+    pipelined schedule can ping-pong producers and consumers between
+    buffer halves (DESIGN.md §Pipeline); the odd-phase store window sits
+    at ``acc_buff/2``, shrinking the OUT budget accordingly.
+    ``max_lam_c``/``max_alpha_c`` cap the tile sizes below the buffer
+    limits — the makespan-driven planner uses them to generate split
+    candidates (more load groups / more chunks = more overlap)."""
+    div = 2 if double_buffer else 1
+    uop_reserve = div
+    inp_budget = cfg.inp_buff_vectors // div
+    wgt_budget = cfg.wgt_buff_matrices // div
+    acc_budget = (cfg.acc_buff_vectors // div) // acc_copies
+    out_budget = cfg.out_buff_vectors - (
+        cfg.acc_buff_vectors // 2 if double_buffer else 0)
+    lam_c = max(1, min(lam, wgt_budget, inp_budget // row_height))
+    if max_lam_c is not None:
+        lam_c = max(1, min(lam_c, max_lam_c))
+    beta_c = max(1, min(beta, wgt_budget // lam_c,
                         acc_budget // row_height,
-                        cfg.out_buff_vectors // row_height,
-                        cfg.uop_buff_entries - 1))
+                        out_budget // row_height,
+                        cfg.uop_buff_entries - uop_reserve))
     alpha_c = max(1, min(alpha,
-                         cfg.inp_buff_vectors // (row_height * lam_c),
+                         inp_budget // (row_height * lam_c),
                          acc_budget // (row_height * beta_c),
-                         cfg.out_buff_vectors // (row_height * beta_c),
-                         (cfg.uop_buff_entries - 1) // beta_c))
+                         out_budget // (row_height * beta_c),
+                         (cfg.uop_buff_entries - uop_reserve) // beta_c))
+    if max_alpha_c is not None:
+        alpha_c = max(1, min(alpha_c, max_alpha_c))
     plan = ChunkPlan(alpha, lam, beta, alpha_c, lam_c, beta_c, row_height,
                      alpha_segs=_segment(alpha, alpha_c, row_groups),
                      beta_segs=_segment(beta, beta_c, col_groups),
-                     acc_copies=acc_copies)
+                     acc_copies=acc_copies, double_buffer=double_buffer)
     _validate_plan(cfg, plan)
     return plan
 
 
 def _validate_plan(cfg: VTAConfig, p: ChunkPlan) -> None:
-    assert p.alpha_c * p.row_height * p.lam_c <= cfg.inp_buff_vectors
-    assert p.lam_c * p.beta_c <= cfg.wgt_buff_matrices
+    div = 2 if p.double_buffer else 1
+    odd_out_base = cfg.acc_buff_vectors // 2 if p.double_buffer else 0
+    assert p.alpha_c * p.row_height * p.lam_c <= cfg.inp_buff_vectors // div
+    assert p.lam_c * p.beta_c <= cfg.wgt_buff_matrices // div
     assert (p.alpha_c * p.row_height * p.beta_c * p.acc_copies
-            <= cfg.acc_buff_vectors)
-    assert p.alpha_c * p.row_height * p.beta_c <= cfg.out_buff_vectors
-    assert p.alpha_c * p.beta_c + 1 <= cfg.uop_buff_entries
+            <= cfg.acc_buff_vectors // div)
+    assert (odd_out_base + p.alpha_c * p.row_height * p.beta_c
+            <= cfg.out_buff_vectors)
+    assert p.alpha_c * p.beta_c + div <= cfg.uop_buff_entries
     assert all(a <= p.alpha_c for _, a in p.alpha_segs)
     assert all(b <= p.beta_c for _, b in p.beta_segs)
 
@@ -413,7 +440,9 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
                    cfg: Optional[VTAConfig] = None,
                    name: str = "matmul",
                    dram_offset: int = 0,
-                   allocator: Optional[DramAllocator] = None) -> VTAProgram:
+                   allocator: Optional[DramAllocator] = None,
+                   schedule: str = pipeline_schedule.SERIALIZED
+                   ) -> VTAProgram:
     """Compile ``C = A·B (+X|+bias)`` + element-wise post-ops to a VTA program.
 
     ``A`` int8 (M,K); ``B`` int8 (K,N); ``X`` int32 (M,N) accumulator preload
@@ -432,6 +461,14 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
     ``allocator`` — pass a shared :class:`DramAllocator` to place several
     programs (network layers, §4.2) in one DRAM region; region names are
     then prefixed with ``name``.
+
+    ``schedule`` — ``"serialized"`` (default) emits the conservative
+    token stream; ``"pipelined"`` double-buffers load groups against GEMM
+    execution and overlaps each chunk's store with the next chunk's
+    compute, picking among candidate chunk plans by modeled three-module
+    makespan (DESIGN.md §Pipeline).  When the buffers are too small to
+    double-buffer the compile falls back to the serialized scheme
+    (``prog.schedule`` records what was actually emitted).
     """
     cfg = cfg or vta_default()
     bs = cfg.block_size
@@ -508,149 +545,411 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
                     layer=name, constraint="alu-index-range")
 
     row_groups, col_groups = _alu_chunk_groups(alu_ops, beta, row_height)
-    plan = plan_chunks(cfg, alpha, lam, beta, row_height,
-                       row_groups=row_groups, col_groups=col_groups,
-                       acc_copies=2 if residual is not None else 1)
-    lam_segs = list(_ranges(lam, plan.lam_c))
-    chunk_list = [(i0, a_c, j0, b_c)
-                  for i0, a_c in plan.alpha_segs
-                  for j0, b_c in plan.beta_segs]
+    acc_copies = 2 if residual is not None else 1
 
-    # ---------------- UOPs ----------------
-    def _gemm_uops(a_c: int, b_c: int, l_c: int) -> List[isa.Uop]:
-        return [isa.Uop(acc_idx=(i * b_c + j) * row_height,
-                        inp_idx=i * l_c * row_height,
-                        wgt_idx=j)
-                for i in range(a_c) for j in range(b_c)]
+    # ---------------- schedule ----------------
+    if schedule not in pipeline_schedule.SCHEDULES:
+        raise CompileError(
+            f"unknown schedule {schedule!r}; expected one of "
+            f"{pipeline_schedule.SCHEDULES}", layer=name,
+            constraint="schedule-unknown")
+    if (schedule == pipeline_schedule.PIPELINED
+            and not pipeline_schedule.pipelinable(cfg, row_height,
+                                                  acc_copies)):
+        # Buffers too small (or UOP fields too narrow) to ping-pong
+        # halves: fall back to the conservative scheme rather than fail.
+        schedule = pipeline_schedule.SERIALIZED
+    sched = pipeline_schedule.make_schedule(cfg, schedule)
 
-    def _alu_chunk_uops(spec, i0: int, a_c: int, j0: int, b_c: int
-                        ) -> List[isa.Uop]:
-        local = lambda v: _chunk_local_index(v, i0, a_c, j0, b_c, beta,
-                                             row_height)
-        out: List[isa.Uop] = []
-        if isinstance(spec, AluResidualOp):
-            # The residual window sits right after the chunk's result
-            # window in ACC SRAM.  One uop drives the whole factor-form
-            # lattice: optionally a pre-shift SHR over the window itself,
-            # then the vector-vector op (dst = result, src = window).
-            base = a_c * b_c * row_height
-            if spec.pre_shift:
-                out.append(isa.Uop(acc_idx=base, inp_idx=base, wgt_idx=0))
-            out.append(isa.Uop(acc_idx=0, inp_idx=base, wgt_idx=0))
-            return out
-        if isinstance(spec, AluIndexedImmOp):
-            for v in spec.indices:
-                lv = local(v)
-                if lv is not None:
-                    out.append(isa.Uop(acc_idx=lv, inp_idx=lv, wgt_idx=0))
-        else:
-            for dst, src in spec.pairs:
-                ld, ls = local(dst), local(src)
-                if (ld is None) != (ls is None):
-                    raise AssertionError(       # plan alignment guarantees
-                        f"pair ({dst}, {src}) straddles a chunk boundary")
-                if ld is not None:
-                    out.append(isa.Uop(acc_idx=ld, inp_idx=ls, wgt_idx=0))
-        return out
+    def _plan(double_buffer: bool, **caps) -> ChunkPlan:
+        return plan_chunks(cfg, alpha, lam, beta, row_height,
+                           row_groups=row_groups, col_groups=col_groups,
+                           acc_copies=acc_copies,
+                           double_buffer=double_buffer, **caps)
 
-    chunk_alu_uops = [
-        [None if isinstance(spec, AluImmOp)
-         else _alu_chunk_uops(spec, i0, a_c, j0, b_c)
-         for spec in alu_ops]
-        for (i0, a_c, j0, b_c) in chunk_list]
-
+    # ---------------- UOPs + emission (per candidate plan) ----------------
     capacity = cfg.uop_buff_entries
-    gemm_keys: List[Tuple[int, int, int]] = []
-    for (i0, a_c, j0, b_c) in chunk_list:
-        for _, l_c in lam_segs:
-            if (a_c, b_c, l_c) not in gemm_keys:
-                gemm_keys.append((a_c, b_c, l_c))
-    n_alu_uops = sum(len(lst) for lists in chunk_alu_uops
-                     for lst in lists if lst is not None)
-    resident_total = (1 + sum(a * b for a, b, _ in gemm_keys) + n_alu_uops)
 
-    # Use-site records.  Each GEMM use is ``(wave, uop_bgn)``; each
-    # indexed/pair ALU use is a list of ``(wave, uop_bgn, count)`` segments
-    # (one AluInsn per segment; chunks with no local entries get none).
-    # ``wave=None`` means "loaded by the preamble", i.e. resident for the
-    # whole program.
-    gemm_use: List[List[Tuple[Optional[int], int]]] = []
-    alu_use: List[List[Optional[List[Tuple[Optional[int], int, int]]]]] = []
-    waves: List[Tuple[int, int]] = []        # (dram_start, count) per wave
-    uop_dram: List[isa.Uop] = [isa.Uop(0, 0, 0)]   # uop@0: reset / simple ALU
+    def _build(plan: ChunkPlan):
+        """UOP DRAM layout + instruction emitter for ``plan`` under
+        ``sched``.  Returns ``(uop_dram, emit)`` where ``emit(log)`` is
+        re-callable — candidate plans are timed with stubbed DRAM bases
+        (``log = lambda r: 0``) before any region exists."""
+        lam_segs = list(_ranges(lam, plan.lam_c))
+        chunk_list = [(i0, a_c, j0, b_c)
+                      for i0, a_c in plan.alpha_segs
+                      for j0, b_c in plan.beta_segs]
+        gpc = len(lam_segs)                    # load groups per chunk
 
-    if resident_total <= capacity:
-        # Everything fits the buffer at once: one preamble LOAD_UOP, SRAM
-        # slot = DRAM index (the original §3.3 layout).
-        gemm_start: Dict[Tuple[int, int, int], int] = {}
-        for key in gemm_keys:
-            gemm_start[key] = len(uop_dram)
-            uop_dram.extend(_gemm_uops(*key))
+        def _gemm_uops(a_c: int, b_c: int, l_c: int, inp_off: int,
+                       wgt_off: int, acc_off: int) -> List[isa.Uop]:
+            return [isa.Uop(acc_idx=acc_off + (i * b_c + j) * row_height,
+                            inp_idx=inp_off + i * l_c * row_height,
+                            wgt_idx=wgt_off + j)
+                    for i in range(a_c) for j in range(b_c)]
+
+        def _alu_chunk_uops(spec, i0: int, a_c: int, j0: int, b_c: int,
+                            acc_off: int) -> List[isa.Uop]:
+            local = lambda v: _chunk_local_index(v, i0, a_c, j0, b_c, beta,
+                                                 row_height)
+            out: List[isa.Uop] = []
+            if isinstance(spec, AluResidualOp):
+                # The residual window sits right after the chunk's result
+                # window in ACC SRAM.  One uop drives the whole factor-form
+                # lattice: optionally a pre-shift SHR over the window
+                # itself, then the vector-vector op (dst = result, src =
+                # window).
+                base = acc_off + a_c * b_c * row_height
+                if spec.pre_shift:
+                    out.append(isa.Uop(acc_idx=base, inp_idx=base,
+                                       wgt_idx=0))
+                out.append(isa.Uop(acc_idx=acc_off, inp_idx=base, wgt_idx=0))
+                return out
+            if isinstance(spec, AluIndexedImmOp):
+                for v in spec.indices:
+                    lv = local(v)
+                    if lv is not None:
+                        out.append(isa.Uop(acc_idx=acc_off + lv,
+                                           inp_idx=acc_off + lv, wgt_idx=0))
+            else:
+                for dst, src in spec.pairs:
+                    ld, ls = local(dst), local(src)
+                    if (ld is None) != (ls is None):
+                        raise AssertionError(   # plan alignment guarantees
+                            f"pair ({dst}, {src}) straddles a chunk "
+                            f"boundary")
+                    if ld is not None:
+                        out.append(isa.Uop(acc_idx=acc_off + ld,
+                                           inp_idx=acc_off + ls, wgt_idx=0))
+            return out
+
+        chunk_alu_uops = [
+            [None if isinstance(spec, AluImmOp)
+             else _alu_chunk_uops(spec, i0, a_c, j0, b_c, sched.acc_base(ci))
+             for spec in alu_ops]
+            for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list)]
+
+        # GEMM uop sets are keyed by geometry *and* buffer phases: the
+        # phase-p load half and phase-q ACC half shift every index.
+        gemm_keys: List[Tuple[int, int, int, int, int]] = []
         for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
-            gemm_use.append([(None, gemm_start[(a_c, b_c, l_c)])
-                             for _, l_c in lam_segs])
-            uses: List[Optional[List[Tuple[Optional[int], int, int]]]] = []
-            for lst in chunk_alu_uops[ci]:
-                if lst is None:
-                    uses.append(None)
-                elif not lst:
-                    uses.append([])      # no local entries in this chunk
-                else:
-                    start = len(uop_dram)
-                    uop_dram.extend(lst)
-                    uses.append([(None, start, len(lst))])
-            alu_use.append(uses)
-        preamble_count = len(uop_dram)
-    else:
-        # Wave streaming: slot 0 keeps the reset uop; slots 1..capacity-1
-        # are reloaded per wave.  Waves are built in execution order, so a
-        # single monotone LOAD_UOP sequence covers every use.
-        preamble_count = 1
-        cap_w = capacity - 1
-        wave_maps: List[Dict[Tuple[int, int, int], Tuple[int, int]]] = []
+            q = sched.chunk_phase(ci)
+            for ki in range(gpc):
+                key = (a_c, b_c, lam_segs[ki][1],
+                       sched.load_phase(ci * gpc + ki), q)
+                if key not in gemm_keys:
+                    gemm_keys.append(key)
 
-        def _begin_wave() -> None:
-            waves.append((len(uop_dram), 0))
-            wave_maps.append({})
+        def _uops_for(key) -> List[isa.Uop]:
+            a_c, b_c, l_c, p, q = key
+            return _gemm_uops(a_c, b_c, l_c, p * sched.inp_half,
+                              p * sched.wgt_half, q * sched.acc_half)
 
-        def _place(key, lst: List[isa.Uop]) -> Tuple[int, int]:
-            if key is not None and key in wave_maps[-1]:
-                return wave_maps[-1][key]
-            start, count = waves[-1]
-            if count + len(lst) > cap_w:
-                _begin_wave()
+        n_alu_uops = sum(len(lst) for lists in chunk_alu_uops
+                         for lst in lists if lst is not None)
+        pinned = sched.pinned_uops()
+        n_pinned = len(pinned)
+        resident_total = (n_pinned + sum(a * b for a, b, _, _, _ in gemm_keys)
+                          + n_alu_uops)
+
+        # Use-site records.  Each GEMM use is ``(wave, uop_bgn)``; each
+        # indexed/pair ALU use is a list of ``(wave, uop_bgn, count)``
+        # segments (one AluInsn per segment; chunks with no local entries
+        # get none).  ``wave=None`` means "loaded by the preamble", i.e.
+        # resident for the whole program.
+        gemm_use: List[List[Tuple[Optional[int], int]]] = []
+        alu_use: List[List[Optional[List[Tuple[Optional[int], int,
+                                               int]]]]] = []
+        waves: List[Tuple[int, int]] = []    # (dram_start, count) per wave
+        uop_dram: List[isa.Uop] = list(pinned)
+
+        if resident_total <= capacity:
+            # Everything fits the buffer at once: one preamble LOAD_UOP,
+            # SRAM slot = DRAM index (the original §3.3 layout).
+            gemm_start: Dict[Tuple[int, int, int, int, int], int] = {}
+            for key in gemm_keys:
+                gemm_start[key] = len(uop_dram)
+                uop_dram.extend(_uops_for(key))
+            for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+                q = sched.chunk_phase(ci)
+                gemm_use.append([
+                    (None, gemm_start[(a_c, b_c, lam_segs[ki][1],
+                                       sched.load_phase(ci * gpc + ki), q)])
+                    for ki in range(gpc)])
+                uses: List[Optional[List[Tuple[Optional[int], int,
+                                               int]]]] = []
+                for lst in chunk_alu_uops[ci]:
+                    if lst is None:
+                        uses.append(None)
+                    elif not lst:
+                        uses.append([])  # no local entries in this chunk
+                    else:
+                        start = len(uop_dram)
+                        uop_dram.extend(lst)
+                        uses.append([(None, start, len(lst))])
+                alu_use.append(uses)
+            preamble_count = len(uop_dram)
+        else:
+            # Wave streaming: the pinned slots keep the reset/base uops;
+            # slots n_pinned..capacity-1 are reloaded per wave.  Waves are
+            # built in execution order, so a single monotone LOAD_UOP
+            # sequence covers every use.
+            preamble_count = n_pinned
+            cap_w = capacity - n_pinned
+            wave_maps: List[Dict[Tuple[int, int, int, int, int],
+                                 Tuple[int, int]]] = []
+
+            def _begin_wave() -> None:
+                waves.append((len(uop_dram), 0))
+                wave_maps.append({})
+
+            def _place(key, lst: List[isa.Uop]) -> Tuple[int, int]:
+                if key is not None and key in wave_maps[-1]:
+                    return wave_maps[-1][key]
                 start, count = waves[-1]
-            uop_dram.extend(lst)
-            waves[-1] = (start, count + len(lst))
-            entry = (len(waves) - 1, 1 + count)
-            if key is not None:
-                wave_maps[-1][key] = entry
-            return entry
+                if count + len(lst) > cap_w:
+                    _begin_wave()
+                    start, count = waves[-1]
+                uop_dram.extend(lst)
+                waves[-1] = (start, count + len(lst))
+                entry = (len(waves) - 1, n_pinned + count)
+                if key is not None:
+                    wave_maps[-1][key] = entry
+                return entry
 
-        _begin_wave()
-        for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
-            assert a_c * b_c <= cap_w, "planner exceeded the uop buffer"
-            gemm_use.append([_place((a_c, b_c, l_c),
-                                    _gemm_uops(a_c, b_c, l_c))
-                             for _, l_c in lam_segs])
-            uses = []
-            for lst in chunk_alu_uops[ci]:
-                if lst is None:
-                    uses.append(None)
-                    continue
-                segs: List[Tuple[Optional[int], int, int]] = []
-                off = 0
-                while off < len(lst):
-                    avail = cap_w - waves[-1][1]
-                    if avail <= 0:
-                        _begin_wave()
-                        avail = cap_w
-                    n = min(avail, len(lst) - off)
-                    w, bgn = _place(None, lst[off:off + n])
-                    segs.append((w, bgn, n))
-                    off += n
-                uses.append(segs)
-            alu_use.append(uses)
+            _begin_wave()
+            for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+                assert a_c * b_c <= cap_w, "planner exceeded the uop buffer"
+                q = sched.chunk_phase(ci)
+                row: List[Tuple[Optional[int], int]] = []
+                for ki in range(gpc):
+                    key = (a_c, b_c, lam_segs[ki][1],
+                           sched.load_phase(ci * gpc + ki), q)
+                    row.append(_place(key, _uops_for(key)))
+                gemm_use.append(row)
+                uses = []
+                for lst in chunk_alu_uops[ci]:
+                    if lst is None:
+                        uses.append(None)
+                        continue
+                    segs: List[Tuple[Optional[int], int, int]] = []
+                    off = 0
+                    while off < len(lst):
+                        avail = cap_w - waves[-1][1]
+                        if avail <= 0:
+                            _begin_wave()
+                            avail = cap_w
+                        n = min(avail, len(lst) - off)
+                        w, bgn = _place(None, lst[off:off + n])
+                        segs.append((w, bgn, n))
+                        off += n
+                    uses.append(segs)
+                alu_use.append(uses)
+
+        def emit(log) -> List[object]:
+            insns: List[object] = []
+
+            # -- program preamble: load UOPs, reset pair (§3.3 step 1) --
+            insns.append(isa.MemInsn(
+                isa.Opcode.LOAD, isa.MemId.UOP, sram_base=0,
+                dram_base=log("uop"), y_size=1,
+                x_size=preamble_count, x_stride=preamble_count))
+            insns.append(isa.GemInsn(reset=1, uop_bgn=0, uop_end=1,
+                                     iter_out=1, iter_in=1))
+
+            loaded_wave: List[Optional[int]] = [None]
+
+            def _ensure_wave(w: Optional[int]) -> None:
+                if w is None or w == loaded_wave[0]:
+                    return
+                start, count = waves[w]
+                insns.append(isa.MemInsn(
+                    isa.Opcode.LOAD, isa.MemId.UOP, sram_base=n_pinned,
+                    dram_base=log("uop") + start, y_size=1,
+                    x_size=count, x_stride=count))
+                loaded_wave[0] = w
+
+            # -- chunk loop (§3.3 steps 2–5) --
+            n_chunks = len(chunk_list)
+            group = 0
+            for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
+                acc_off = sched.acc_base(ci)
+                slot = sched.base_uop_slot(ci)
+                # The chunk's *first* Compute-module instruction waits for
+                # the store that released this phase's ACC/OUT half — it
+                # must be the first one (the ACC preload / reset also
+                # writes the window; a later pop would leave a WAR race
+                # with the draining store).
+                store_wait = sched.chunk_pops_store(ci)
+                if has_x:
+                    # ACC preload (compute-module LOAD): chunk rows are
+                    # strided runs of b_c·rh vectors out of the β·rh-wide
+                    # block rows.
+                    pre = isa.MemInsn(
+                        isa.Opcode.LOAD, isa.MemId.ACC, sram_base=acc_off,
+                        dram_base=log("acc") + (i0 * beta + j0) * row_height,
+                        y_size=a_c, x_size=b_c * row_height,
+                        x_stride=beta * row_height)
+                    if store_wait:
+                        pre.dep.pop_next = 1
+                        store_wait = False
+                    insns.append(pre)
+                for ki, (k0, l_c) in enumerate(lam_segs):
+                    li = isa.MemInsn(
+                        isa.Opcode.LOAD, isa.MemId.INP,
+                        sram_base=sched.inp_base(group),
+                        dram_base=log("inp") + (i0 * lam + k0) * row_height,
+                        y_size=a_c, x_size=l_c * row_height,
+                        x_stride=lam * row_height)
+                    if sched.load_pops_release(group):
+                        li.dep.pop_next = 1  # wait for buffer-half release
+                    lw = isa.MemInsn(
+                        isa.Opcode.LOAD, isa.MemId.WGT,
+                        sram_base=sched.wgt_base(group),
+                        dram_base=log("wgt") + k0 * beta + j0,
+                        y_size=l_c, x_size=b_c, x_stride=beta)
+                    lw.dep.push_next = 1     # load group complete
+                    insns.extend([li, lw])
+                    group += 1
+
+                    if not has_x and k0 == 0:
+                        # no X preload: zero the chunk accumulator
+                        rg = isa.GemInsn(
+                            reset=1, uop_bgn=slot, uop_end=slot + 1,
+                            iter_out=a_c * b_c, iter_in=row_height,
+                            acc_factor_out=row_height, acc_factor_in=1)
+                        if store_wait:
+                            rg.dep.pop_next = 1
+                            store_wait = False
+                        insns.append(rg)
+                    wave, start = gemm_use[ci][ki]
+                    _ensure_wave(wave)
+                    g = isa.GemInsn(
+                        uop_bgn=start, uop_end=start + a_c * b_c,
+                        iter_out=l_c, iter_in=row_height,
+                        acc_factor_out=0, acc_factor_in=1,
+                        inp_factor_out=row_height, inp_factor_in=1,
+                        wgt_factor_out=b_c, wgt_factor_in=0)
+                    g.dep.pop_prev = 1       # consume load group
+                    g.dep.push_prev = 1      # release INP/WGT half
+                    insns.append(g)
+
+                for spec, use in zip(alu_ops, alu_use[ci]):
+                    if isinstance(spec, AluImmOp):
+                        insns.append(isa.AluInsn(
+                            alu_opcode=spec.op, uop_bgn=slot,
+                            uop_end=slot + 1,
+                            iter_out=a_c * b_c, iter_in=row_height,
+                            dst_factor_out=row_height, dst_factor_in=1,
+                            src_factor_out=row_height, src_factor_in=1,
+                            use_imm=1, imm=spec.imm))
+                        continue
+                    if isinstance(spec, AluResidualOp):
+                        # Load the chunk's residual window (compute-module
+                        # LOAD, same strided geometry as the chunk result)
+                        # beside the result window, then run the
+                        # factor-form lattice over every result vector:
+                        # pre-shift SHR first when the scales need
+                        # equalising, then the vector-vector op.
+                        res_base = acc_off + a_c * b_c * row_height
+                        insns.append(isa.MemInsn(
+                            isa.Opcode.LOAD, isa.MemId.ACC,
+                            sram_base=res_base,
+                            dram_base=log("res")
+                            + (i0 * beta + j0) * row_height,
+                            y_size=a_c, x_size=b_c * row_height,
+                            x_stride=beta * row_height))
+                        pos = 0
+                        for (wave, start, count) in use:
+                            _ensure_wave(wave)
+                            for t in range(count):
+                                is_pre = pos == 0 and spec.pre_shift > 0
+                                insns.append(isa.AluInsn(
+                                    alu_opcode=(isa.AluOp.SHR if is_pre
+                                                else spec.op),
+                                    uop_bgn=start + t,
+                                    uop_end=start + t + 1,
+                                    iter_out=a_c * b_c, iter_in=row_height,
+                                    dst_factor_out=row_height,
+                                    dst_factor_in=1,
+                                    src_factor_out=row_height,
+                                    src_factor_in=1,
+                                    use_imm=1 if is_pre else 0,
+                                    imm=spec.pre_shift if is_pre else 0))
+                                pos += 1
+                        continue
+                    use_imm = 1 if isinstance(spec, AluIndexedImmOp) else 0
+                    imm = spec.imm if use_imm else 0
+                    for (wave, start, count) in use:
+                        _ensure_wave(wave)
+                        insns.append(isa.AluInsn(
+                            alu_opcode=spec.op, uop_bgn=start,
+                            uop_end=start + count,
+                            iter_out=1, iter_in=1, use_imm=use_imm,
+                            imm=imm))
+                insns[-1].dep.push_next = 1  # result ready for store
+                if (sched.depth > 1 and ci == n_chunks - 1
+                        and n_chunks >= sched.depth):
+                    # Tail drain: with depth-2 overlap the store tokens of
+                    # the last depth-1 chunks are never popped by a later
+                    # chunk; consume the stale one here so FINISH's pop
+                    # matches the *final* store's push.
+                    insns[-1].dep.pop_next = 1
+
+                st = isa.MemInsn(
+                    isa.Opcode.STORE, isa.MemId.OUT, sram_base=acc_off,
+                    dram_base=log("out") + (i0 * beta + j0) * row_height,
+                    y_size=a_c, x_size=b_c * row_height,
+                    x_stride=beta * row_height)
+                st.dep.pop_prev = 1
+                st.dep.push_prev = 1
+                insns.append(st)
+
+            fin = isa.FinishInsn()
+            fin.dep.pop_next = 1             # last store completed
+            insns.append(fin)
+            return insns
+
+        return uop_dram, emit
+
+    # ---------------- candidate plans, picked by modeled makespan ----------
+    if sched.depth > 1:
+        base = _plan(True)
+        candidates = [base]
+        seen = {(base.alpha_segs, base.beta_segs, base.lam_c)}
+
+        def _try(**caps) -> None:
+            try:
+                p = _plan(True, **caps)
+            except CompileError:
+                return                        # split collides with groups
+            k = (p.alpha_segs, p.beta_segs, p.lam_c)
+            if k not in seen:
+                seen.add(k)
+                candidates.append(p)
+
+        # λ split → ≥2 load groups per chunk (double-buffered loads can
+        # overlap GEMMs even inside a single chunk); α split → ≥2 chunks
+        # (stores overlap the next chunk's compute).
+        if base.lam_c > 1:
+            _try(max_lam_c=-(-base.lam_c // 2))
+        if base.alpha_c > 1:
+            _try(max_alpha_c=-(-base.alpha_c // 2))
+        if base.lam_c > 1 and base.alpha_c > 1:
+            _try(max_lam_c=-(-base.lam_c // 2),
+                 max_alpha_c=-(-base.alpha_c // 2))
+    else:
+        candidates = [_plan(False)]
+
+    built = {id(p): _build(p) for p in candidates}
+    if len(candidates) > 1:
+        plan, _ = pipeline_schedule.choose_plan(
+            candidates,
+            lambda p: built[id(p)][1](lambda r: 0),
+            cycle_model.simulate_pipeline)
+    else:
+        plan = candidates[0]
+    uop_dram, emit = built[id(plan)]
 
     # ---------------- DRAM allocation (§2.2, order per §3.4) ----------------
     alloc = allocator if allocator is not None else DramAllocator(
@@ -675,7 +974,8 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
                                  len(uop_dram))
 
     prog = VTAProgram(config=cfg, allocator=alloc, uops=uop_dram, name=name,
-                      regions=regions, chunk_plan=plan)
+                      regions=regions, chunk_plan=plan,
+                      schedule=sched.name)
     prog.set_segment("inp", inp_bin)
     prog.set_segment("wgt", wgt_bin)
     if has_x:
@@ -684,144 +984,7 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
         prog.set_segment("res", res_bin)
 
     log = lambda r: regions[r].logical_addr(alloc.offset)
-    insns: List[object] = []
-
-    # -- program preamble: load UOPs, reset pair (§3.3 steps 1) --
-    insns.append(isa.MemInsn(isa.Opcode.LOAD, isa.MemId.UOP, sram_base=0,
-                             dram_base=log("uop"), y_size=1,
-                             x_size=preamble_count, x_stride=preamble_count))
-    insns.append(isa.GemInsn(reset=1, uop_bgn=0, uop_end=1,
-                             iter_out=1, iter_in=1))
-
-    loaded_wave: Optional[int] = None
-
-    def _ensure_wave(w: Optional[int]) -> None:
-        nonlocal loaded_wave
-        if w is None or w == loaded_wave:
-            return
-        start, count = waves[w]
-        insns.append(isa.MemInsn(
-            isa.Opcode.LOAD, isa.MemId.UOP, sram_base=1,
-            dram_base=log("uop") + start, y_size=1,
-            x_size=count, x_stride=count))
-        loaded_wave = w
-
-    # -- chunk loop (§3.3 steps 2–5) --
-    load_groups = 0
-    stores = 0
-    for ci, (i0, a_c, j0, b_c) in enumerate(chunk_list):
-        first_gemm_of_chunk = True
-        if has_x:
-            # ACC preload (compute-module LOAD): chunk rows are strided
-            # runs of b_c·rh vectors out of the β·rh-wide block rows.
-            insns.append(isa.MemInsn(
-                isa.Opcode.LOAD, isa.MemId.ACC, sram_base=0,
-                dram_base=log("acc") + (i0 * beta + j0) * row_height,
-                y_size=a_c, x_size=b_c * row_height,
-                x_stride=beta * row_height))
-        for ki, (k0, l_c) in enumerate(lam_segs):
-            li = isa.MemInsn(
-                isa.Opcode.LOAD, isa.MemId.INP, sram_base=0,
-                dram_base=log("inp") + (i0 * lam + k0) * row_height,
-                y_size=a_c, x_size=l_c * row_height,
-                x_stride=lam * row_height)
-            if load_groups > 0:
-                li.dep.pop_next = 1          # wait for compute buffer release
-            lw = isa.MemInsn(
-                isa.Opcode.LOAD, isa.MemId.WGT, sram_base=0,
-                dram_base=log("wgt") + k0 * beta + j0,
-                y_size=l_c, x_size=b_c, x_stride=beta)
-            lw.dep.push_next = 1             # load group complete
-            insns.extend([li, lw])
-            load_groups += 1
-
-            if not has_x and k0 == 0:
-                # no X preload: zero the chunk accumulator
-                rg = isa.GemInsn(
-                    reset=1, uop_bgn=0, uop_end=1,
-                    iter_out=a_c * b_c, iter_in=row_height,
-                    acc_factor_out=row_height, acc_factor_in=1)
-                if first_gemm_of_chunk and stores > 0:
-                    rg.dep.pop_next = 1      # wait for previous store
-                    first_gemm_of_chunk = False
-                insns.append(rg)
-            wave, start = gemm_use[ci][ki]
-            _ensure_wave(wave)
-            g = isa.GemInsn(
-                uop_bgn=start, uop_end=start + a_c * b_c,
-                iter_out=l_c, iter_in=row_height,
-                acc_factor_out=0, acc_factor_in=1,
-                inp_factor_out=row_height, inp_factor_in=1,
-                wgt_factor_out=b_c, wgt_factor_in=0)
-            g.dep.pop_prev = 1               # consume load group
-            g.dep.push_prev = 1              # release INP/WGT buffers
-            if first_gemm_of_chunk and stores > 0:
-                g.dep.pop_next = 1           # wait for previous store
-            first_gemm_of_chunk = False
-            insns.append(g)
-
-        for spec, use in zip(alu_ops, alu_use[ci]):
-            if isinstance(spec, AluImmOp):
-                insns.append(isa.AluInsn(
-                    alu_opcode=spec.op, uop_bgn=0, uop_end=1,
-                    iter_out=a_c * b_c, iter_in=row_height,
-                    dst_factor_out=row_height, dst_factor_in=1,
-                    src_factor_out=row_height, src_factor_in=1,
-                    use_imm=1, imm=spec.imm))
-                continue
-            if isinstance(spec, AluResidualOp):
-                # Load the chunk's residual window (compute-module LOAD,
-                # same strided geometry as the chunk result) beside the
-                # result window, then run the factor-form lattice over
-                # every result vector: pre-shift SHR first when the scales
-                # need equalising, then the vector-vector op.
-                res_base = a_c * b_c * row_height
-                insns.append(isa.MemInsn(
-                    isa.Opcode.LOAD, isa.MemId.ACC, sram_base=res_base,
-                    dram_base=log("res") + (i0 * beta + j0) * row_height,
-                    y_size=a_c, x_size=b_c * row_height,
-                    x_stride=beta * row_height))
-                pos = 0
-                for (wave, start, count) in use:
-                    _ensure_wave(wave)
-                    for t in range(count):
-                        is_pre = pos == 0 and spec.pre_shift > 0
-                        insns.append(isa.AluInsn(
-                            alu_opcode=(isa.AluOp.SHR if is_pre
-                                        else spec.op),
-                            uop_bgn=start + t, uop_end=start + t + 1,
-                            iter_out=a_c * b_c, iter_in=row_height,
-                            dst_factor_out=row_height, dst_factor_in=1,
-                            src_factor_out=row_height, src_factor_in=1,
-                            use_imm=1 if is_pre else 0,
-                            imm=spec.pre_shift if is_pre else 0))
-                        pos += 1
-                continue
-            use_imm = 1 if isinstance(spec, AluIndexedImmOp) else 0
-            imm = spec.imm if use_imm else 0
-            for (wave, start, count) in use:
-                _ensure_wave(wave)
-                insns.append(isa.AluInsn(
-                    alu_opcode=spec.op, uop_bgn=start,
-                    uop_end=start + count,
-                    iter_out=1, iter_in=1, use_imm=use_imm, imm=imm))
-        insns[-1].dep.push_next = 1          # result ready for store
-
-        st = isa.MemInsn(
-            isa.Opcode.STORE, isa.MemId.OUT, sram_base=0,
-            dram_base=log("out") + (i0 * beta + j0) * row_height,
-            y_size=a_c, x_size=b_c * row_height,
-            x_stride=beta * row_height)
-        st.dep.pop_prev = 1
-        st.dep.push_prev = 1
-        insns.append(st)
-        stores += 1
-
-    fin = isa.FinishInsn()
-    fin.dep.pop_next = 1                     # last store completed
-    insns.append(fin)
-
-    prog.instructions = insns
+    prog.instructions = emit(log)
 
     # ---------------- expected output (oracle) ----------------
     acc_ref, out_ref = reference_result(A, B, X, alu_ops, cfg,

@@ -316,8 +316,8 @@ def residual_operand_matrix(spec: LayerSpec, residual: np.ndarray,
 def _compile_residual_layer(spec: LayerSpec, A: np.ndarray, B: np.ndarray,
                             geo: Optional[ConvGeometry],
                             residual: Optional[np.ndarray], cfg: VTAConfig,
-                            allocator: Optional[DramAllocator]
-                            ) -> CompiledLayer:
+                            allocator: Optional[DramAllocator],
+                            schedule: str = "serialized") -> CompiledLayer:
     """The residual-closing layer (DESIGN.md §Graph): GEMM → SHR(requant)
     → on-VTA vector-vector ADD with the ACC-loaded skip operand →
     optional ReLU → SHR(post-add requant)."""
@@ -366,7 +366,8 @@ def _compile_residual_layer(spec: LayerSpec, A: np.ndarray, B: np.ndarray,
         alu_ops.append(AluImmOp.shr(s_add))
 
     prog = compile_matmul(A, B, bias=spec.bias, alu_ops=alu_ops, residual=R,
-                          cfg=cfg, name=spec.name, allocator=allocator)
+                          cfg=cfg, name=spec.name, allocator=allocator,
+                          schedule=schedule)
     out_h = geo.out_h if geo is not None else None
     out_w = geo.out_w if geo is not None else None
     return CompiledLayer(spec=spec, program=prog, input_matrix=A,
@@ -379,7 +380,8 @@ def _compile_residual_layer(spec: LayerSpec, A: np.ndarray, B: np.ndarray,
 def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
                   cfg: Optional[VTAConfig] = None,
                   allocator: Optional[DramAllocator] = None,
-                  residual: Optional[np.ndarray] = None) -> CompiledLayer:
+                  residual: Optional[np.ndarray] = None,
+                  schedule: str = "serialized") -> CompiledLayer:
     """Compile one layer (Fig. 11) down to a :class:`VTAProgram`.
 
     For residual layers (``spec.residual_add``) pass the skip activation
@@ -390,7 +392,7 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
     A, B, geo = layer_matrices(spec, inp)
     if spec.residual_add:
         return _compile_residual_layer(spec, A, B, geo, residual, cfg,
-                                       allocator)
+                                       allocator, schedule=schedule)
     if residual is not None:
         raise CompileError(
             "residual operand passed to a layer without residual_add",
@@ -446,7 +448,8 @@ def compile_layer(spec: LayerSpec, inp: np.ndarray, *,
         alu_ops.append(AluImmOp.shr(shift))
 
     prog = compile_matmul(A, B, bias=spec.bias, alu_ops=alu_ops, cfg=cfg,
-                          name=spec.name, allocator=allocator)
+                          name=spec.name, allocator=allocator,
+                          schedule=schedule)
 
     # ---- reference post-reshape output matrix (int8) ----
     ref = truncate_int8(final)

@@ -415,7 +415,8 @@ def calibrate_network_shifts(specs: Sequence[LayerSpec],
 
 def compile_network(specs: Sequence[LayerSpec], input_tensor: np.ndarray, *,
                     cfg: Optional[VTAConfig] = None,
-                    dram_offset: int = 0) -> NetworkProgram:
+                    dram_offset: int = 0,
+                    schedule: str = "serialized") -> NetworkProgram:
     """Compile a network: every layer against one shared DRAM allocation,
     each layer's input taken from the previous layer's reference output."""
     cfg = cfg or vta_default()
@@ -423,7 +424,8 @@ def compile_network(specs: Sequence[LayerSpec], input_tensor: np.ndarray, *,
     layers: List[CompiledLayer] = []
     current: np.ndarray = np.asarray(input_tensor, dtype=np.int8)
     for spec in specs:
-        layer = compile_layer(spec, current, cfg=cfg, allocator=alloc)
+        layer = compile_layer(spec, current, cfg=cfg, allocator=alloc,
+                              schedule=schedule)
         layers.append(layer)
         # Reference output becomes the next layer's input (semantic form).
         ref = layer.ref_output_matrix

@@ -54,6 +54,11 @@ class VTAProgram:
     # for the §3.3 chunk loop (n_chunks, segment geometry); None for
     # hand-written instruction streams.
     chunk_plan: Optional[object] = None
+    # Which task-level pipeline schedule the token stream implements
+    # ("serialized" or "pipelined", DESIGN.md §Pipeline).  A requested
+    # "pipelined" compile that falls back (buffers too small to
+    # double-buffer) records "serialized" here.
+    schedule: str = "serialized"
     # CRC32 of every segment, captured by finalize() — the integrity
     # reference the harden/ guards verify serves against (DESIGN.md
     # §Hardening).  Segment bytes are immutable, so the values stay valid

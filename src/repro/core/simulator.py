@@ -81,6 +81,12 @@ class TokenQueues:
             ("load", "compute"): 0, ("compute", "load"): 0,
             ("compute", "store"): 0, ("store", "compute"): 0,
         }
+        # Accounting for SimReport (DESIGN.md §Pipeline): total token
+        # traffic and the deepest any queue ever got — the pipelined
+        # schedule shows up as high_water 2 on the producer queues.
+        self.pops = 0
+        self.pushes = 0
+        self.high_water = 0
 
     def _pop(self, src: Optional[str], dst: str) -> None:
         if src is None:
@@ -89,11 +95,15 @@ class TokenQueues:
             raise VTAHazardError(
                 f"dependency hazard: {dst} pops empty queue from {src}")
         self.counters[(src, dst)] -= 1
+        self.pops += 1
 
     def _push(self, src: str, dst: Optional[str]) -> None:
         if dst is None:
             raise VTAHazardError(f"{src}: push to nonexistent neighbour")
         self.counters[(src, dst)] += 1
+        self.pushes += 1
+        if self.counters[(src, dst)] > self.high_water:
+            self.high_water = self.counters[(src, dst)]
 
     def pre(self, insn) -> None:
         mod = module_of(insn)
@@ -108,6 +118,16 @@ class TokenQueues:
             self._push(mod, self._PREV[mod])
         if insn.dep.push_next:
             self._push(mod, self._NEXT[mod])
+
+    def account(self, report: "SimReport") -> None:
+        """Fold the token traffic into a :class:`SimReport` (additive, so
+        multi-layer/network runs accumulate across streams)."""
+        report.dep_pops += self.pops
+        report.dep_pushes += self.pushes
+        report.dep_queue_high_water = max(report.dep_queue_high_water,
+                                          self.high_water)
+        self.pops = 0
+        self.pushes = 0
 
 
 @dataclasses.dataclass
@@ -126,6 +146,12 @@ class SimReport:
     # suites compare loop/traffic fields, so these ride along freely.
     acc_overflow_lanes: int = 0    # int32 lanes that wrapped in GEMM/ALU
     acc_saturation_lanes: int = 0  # ACC lanes outside int8 at OUT commit
+    # §2.3 dependency-token traffic (DESIGN.md §Pipeline): pops/pushes
+    # processed and the deepest any of the four queues ever got —
+    # serialized streams stay at 1; the double-buffered schedule reaches 2.
+    dep_pops: int = 0
+    dep_pushes: int = 0
+    dep_queue_high_water: int = 0
 
     @property
     def dram_bytes_total(self) -> int:
@@ -447,6 +473,7 @@ class FunctionalSimulator:
             self.tokens.post(insn)
             if isinstance(insn, isa.FinishInsn):
                 break
+        self.tokens.account(self.report)
         return self.report
 
 

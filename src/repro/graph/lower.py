@@ -44,7 +44,8 @@ def compile_graph(graph: Graph, input_tensor: np.ndarray, *,
                   calib: Optional[Sequence[np.ndarray]] = None,
                   margin: int = 1,
                   cfg: Optional[VTAConfig] = None,
-                  dram_offset: int = 0) -> NetworkProgram:
+                  dram_offset: int = 0,
+                  schedule: str = "serialized") -> NetworkProgram:
     """Compile a branching CNN graph into a :class:`NetworkProgram`.
 
     ``calib`` is the §4.2 calibration set for the requant planner
@@ -101,7 +102,7 @@ def compile_graph(graph: Graph, input_tensor: np.ndarray, *,
             residual = _as_activation(vals[step.residual_source], step,
                                       "residual")
         layer = compile_layer(spec, inp, cfg=cfg, allocator=alloc,
-                              residual=residual)
+                              residual=residual, schedule=schedule)
         _check_step_reference(layer, vals[step.output_value], step)
         produced[step.output_value] = len(layers)
         layers.append(layer)

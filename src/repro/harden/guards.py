@@ -40,7 +40,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import isa
+from repro.core import isa, pipeline_schedule
 from repro.core.errors import CompileError
 from repro.core.fast_simulator import invalidate_plan
 from repro.core.simulator import TokenQueues, VTAHazardError
@@ -409,6 +409,15 @@ def validate_program(prog) -> None:
             tokens.post(insn)
             if isinstance(insn, isa.FinishInsn):
                 break
+    except VTAHazardError as e:
+        _reject(prog, "dep-token-hazard", str(e))
+    # 5. concurrent-hazard check (DESIGN.md §Pipeline): on the real
+    #    three-module machine a *relaxed* token stream may be perfectly
+    #    balanced yet leave two modules racing on an SRAM range — verify
+    #    every conflicting access pair is ordered by the happens-before
+    #    relation the tokens imply.
+    try:
+        pipeline_schedule.check_program_hazards(prog)
     except VTAHazardError as e:
         _reject(prog, "dep-token-hazard", str(e))
     if seg is not None:

@@ -189,7 +189,8 @@ def synthetic_image(seed: int = 0) -> np.ndarray:
 
 def compile_resnet8(weights: Optional[Resnet8Weights] = None, *,
                     calib_seeds: Sequence[int] = range(1, 9),
-                    input_seed: int = 0, margin: int = 1):
+                    input_seed: int = 0, margin: int = 1,
+                    schedule: str = "serialized"):
     """Build + plan + compile resnet8; returns ``(net, graph)``.
 
     Two-phase §4.2 calibration (weight scales, then requant/pre-shift
@@ -202,7 +203,7 @@ def compile_resnet8(weights: Optional[Resnet8Weights] = None, *,
     graph = build_resnet8(weights, wexps)
     net = compile_graph(graph, synthetic_image(input_seed),
                         calib=calib + [synthetic_image(input_seed)],
-                        margin=margin)
+                        margin=margin, schedule=schedule)
     return net, graph
 
 

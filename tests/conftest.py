@@ -1,0 +1,17 @@
+"""Shared pytest hooks.
+
+``fuzz`` marker routing (pytest.ini): hypothesis tags every ``@given``
+test with a ``hypothesis`` keyword — mirror it as our own ``fuzz``
+marker so CI can split the suite.  The deterministic core job runs
+``pytest -m "not legacy and not fuzz"``; the separate *blocking* fuzz
+job runs ``pytest -m fuzz``; the local tier-1 command
+(``pytest -m "not legacy"``) still runs both.
+"""
+
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if "hypothesis" in item.keywords:
+            item.add_marker(pytest.mark.fuzz)

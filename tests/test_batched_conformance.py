@@ -15,6 +15,12 @@ reductions (DESIGN.md §Strided-lowering), and handcrafted streams whose
 UOP/WGT DRAM regions differ *per batch row* (driving the non-uniform
 general paths the serving workload never hits).
 
+Every drawn workload is additionally recompiled with
+``schedule="pipelined"`` (DESIGN.md §Pipeline): the double-buffered
+stream must pass the full validator (dep-token dry run + concurrent
+hazard check), stay batch == oracle-loop bit-identical, and produce the
+serialized program's OUT bytes on all three backends.
+
 The seeded fuzz below is hypothesis-free (tier-1 floor); an equivalent
 hypothesis property runs when the optional dependency is installed.
 """
@@ -23,13 +29,14 @@ import numpy as np
 import pytest
 
 from repro.core import isa
-from repro.core.fast_simulator import (BatchFastSimulator, plan_for,
-                                       run_batch)
+from repro.core.fast_simulator import (BatchFastSimulator, FastSimulator,
+                                       plan_for, run_batch)
 from repro.core.gemm_compiler import (AluImmOp, AluIndexedImmOp, AluPairOp,
                                       compile_matmul)
 from repro.core.hwconfig import VTAConfig, vta_default
 from repro.core.layer_compiler import LayerSpec, compile_layer
 from repro.core.simulator import FunctionalSimulator
+from repro.harden.guards import validate_program
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -88,6 +95,44 @@ def assert_batch_matches_oracle_loop(cfg, instructions, stack, *,
     return rep_b
 
 
+# ---------------------------------------------------------------------------
+# Pipelined-schedule conformance (DESIGN.md §Pipeline)
+# ---------------------------------------------------------------------------
+
+def _out_bytes_after(prog, backend):
+    """Execute ``prog`` on one backend; return its OUT region bytes (the
+    decoded-result source, layout-independent of the chunk plan)."""
+    if backend == "batched":
+        sim = BatchFastSimulator(prog.config, prog.dram_image()[None].copy())
+        sim.run(prog.instructions, plan=plan_for(prog))
+        dram = sim.dram[0]
+    else:
+        cls = FunctionalSimulator if backend == "oracle" else FastSimulator
+        sim = cls(prog.config, prog.dram_image())
+        sim.run(prog.instructions)
+        dram = sim.dram
+    region = prog.regions["out"]
+    start = region.phys_addr - prog.allocator.offset
+    return dram[start:start + region.nbytes].copy()
+
+
+def assert_pipelined_variant_conforms(prog_s, prog_p, rng, batch=3):
+    """The §Pipeline contract for one drawn workload: the pipelined
+    stream passes the full validator (including the concurrent-hazard
+    check), stays batch == oracle-loop bit-identical on a varied stack,
+    and matches the serialized OUT bytes on every backend."""
+    assert prog_p.schedule == "pipelined", "expected a pipelined stream"
+    validate_program(prog_p)
+    stack = varied_stack(prog_p, rng, batch)
+    assert_batch_matches_oracle_loop(prog_p.config, prog_p.instructions,
+                                     stack, plan=plan_for(prog_p))
+    ref = _out_bytes_after(prog_s, "oracle")
+    for backend in ("oracle", "fast", "batched"):
+        np.testing.assert_array_equal(
+            _out_bytes_after(prog_p, backend), ref,
+            err_msg=f"pipelined {backend} diverged from serialized")
+
+
 def _random_alu_ops(rng):
     ops = []
     if rng.random() < 0.5:
@@ -115,11 +160,15 @@ def test_fuzz_random_programs_random_batch_sizes():
         X = None
         if rng.random() < 0.4:
             X = rng.integers(-10**6, 10**6, (m, n)).astype(np.int32)
-        prog = compile_matmul(A, B, X=X, alu_ops=_random_alu_ops(rng))
+        ops = _random_alu_ops(rng)
+        prog = compile_matmul(A, B, X=X, alu_ops=ops)
         batch = int(rng.integers(1, 17))
         stack = varied_stack(prog, rng, batch)
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_matmul(A, B, X=X, alu_ops=ops,
+                                schedule="pipelined")
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 def test_fuzz_varied_weights_drive_nonuniform_gemm():
@@ -130,11 +179,14 @@ def test_fuzz_varied_weights_drive_nonuniform_gemm():
         m, k, n = (int(rng.integers(4, 40)) for _ in range(3))
         A = rng.integers(-128, 128, (m, k)).astype(np.int8)
         B = rng.integers(-128, 128, (k, n)).astype(np.int8)
-        prog = compile_matmul(A, B, alu_ops=_random_alu_ops(rng))
+        ops = _random_alu_ops(rng)
+        prog = compile_matmul(A, B, alu_ops=ops)
         stack = varied_stack(prog, rng, int(rng.integers(2, 9)),
                              vary=("inp", "acc", "wgt"))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_matmul(A, B, alu_ops=ops, schedule="pipelined")
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 _SMALL_CFG = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
@@ -151,12 +203,15 @@ def test_fuzz_multi_chunk_programs_batched():
         n = int(rng.integers(17, 50))
         A = rng.integers(-64, 64, (m, k)).astype(np.int8)
         B = rng.integers(-64, 64, (k, n)).astype(np.int8)
-        prog = compile_matmul(A, B, alu_ops=_random_alu_ops(rng),
-                              cfg=_SMALL_CFG)
+        ops = _random_alu_ops(rng)
+        prog = compile_matmul(A, B, alu_ops=ops, cfg=_SMALL_CFG)
         assert prog.chunk_plan.n_chunks > 1
         stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_matmul(A, B, alu_ops=ops, cfg=_SMALL_CFG,
+                                schedule="pipelined")
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 def test_fuzz_uop_wave_streaming_batched():
@@ -176,10 +231,8 @@ def test_fuzz_uop_wave_streaming_batched():
         n_vec = -(-m // rh) * -(-n // rh) * rh
         idx = tuple(int(v) for v in rng.choice(n_vec, size=n_vec // 2,
                                                replace=False))
-        prog = compile_matmul(A, B, cfg=cfg,
-                              alu_ops=[AluImmOp.relu(),
-                                       AluIndexedImmOp(isa.AluOp.ADD, 3,
-                                                       idx)])
+        ops = [AluImmOp.relu(), AluIndexedImmOp(isa.AluOp.ADD, 3, idx)]
+        prog = compile_matmul(A, B, cfg=cfg, alu_ops=ops)
         n_uop_loads = sum(1 for i in prog.instructions
                           if isinstance(i, isa.MemInsn)
                           and i.memory_type == isa.MemId.UOP)
@@ -187,6 +240,9 @@ def test_fuzz_uop_wave_streaming_batched():
         stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_matmul(A, B, cfg=cfg, alu_ops=ops,
+                                schedule="pipelined")
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 def test_padded_conv_and_pool_pairs_batched():
@@ -209,6 +265,9 @@ def test_padded_conv_and_pool_pairs_batched():
         stack = varied_stack(prog, rng, 5)
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_layer(spec, inp, cfg=cfg,
+                               schedule="pipelined").program
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 def test_fuzz_strided_conv_programs_batched():
@@ -233,6 +292,8 @@ def test_fuzz_strided_conv_programs_batched():
         stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_layer(spec, inp, schedule="pipelined").program
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 def test_fuzz_gap_reduction_programs_batched():
@@ -266,6 +327,9 @@ def test_fuzz_gap_reduction_programs_batched():
         stack = varied_stack(prog, rng, int(rng.integers(2, 7)))
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_layer(spec, inp, cfg=cfg,
+                               schedule="pipelined").program
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +497,8 @@ if HAS_HYPOTHESIS:
         stack = varied_stack(prog, rng, batch)
         assert_batch_matches_oracle_loop(prog.config, prog.instructions,
                                          stack, plan=plan_for(prog))
+        prog_p = compile_matmul(A, B, alu_ops=ops, schedule="pipelined")
+        assert_pipelined_variant_conforms(prog, prog_p, rng)
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_hypothesis_run_batch_bit_identical():

@@ -1,0 +1,120 @@
+"""Regression pins for the three-module cycle model and the pipeline
+scheduler (DESIGN.md §Pipeline, EXPERIMENTS.md §Pipeline).
+
+The concurrent timeline is deterministic, so the per-module golden
+counts for lenet5 / resnet8 under both schedules are pinned *exactly* —
+any drift means the scheduler's emission or the model's cost function
+changed and must be re-justified.  Two invariants ride along:
+
+* the §5.2 calibration (2972 TensorGemm cycles for serialized LeNet-5)
+  must never move — pipelining is opt-in, the default stream is
+  byte-identical to the pre-scheduler compiler's;
+* the pipelined makespan is bounded by the serialized schedule's total
+  busy cycles (it may trade a small busy premium for large stall wins,
+  never the reverse).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cycle_model
+from repro.core.gemm_compiler import AluImmOp, compile_matmul
+from repro.core.network_compiler import compile_network
+from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                synthetic_digit)
+
+GOLDEN = {
+    "lenet5": {
+        "serialized": (8926, {"load": 3053, "compute": 6843, "store": 941}),
+        "pipelined": (7679, {"load": 3131, "compute": 6963, "store": 959}),
+    },
+    "resnet8": {
+        "serialized": (99201,
+                       {"load": 33576, "compute": 77052, "store": 5771}),
+        "pipelined": (81775,
+                      {"load": 35488, "compute": 78696, "store": 5993}),
+    },
+}
+
+
+def _lenet5_programs(schedule):
+    net = compile_network(lenet5_specs(lenet5_random_weights()),
+                          synthetic_digit(0), schedule=schedule)
+    return [layer.program for layer in net.layers]
+
+
+def _resnet8_programs(schedule):
+    from repro.models.resnet8 import compile_resnet8
+    net, _graph = compile_resnet8(schedule=schedule)
+    return [layer.program for layer in net.layers]
+
+
+@pytest.mark.parametrize("schedule", ["serialized", "pipelined"])
+def test_lenet5_golden_module_counts(schedule):
+    progs = _lenet5_programs(schedule)
+    assert all(p.schedule == schedule for p in progs)
+    rep = cycle_model.simulate_programs(progs)
+    makespan, busy = GOLDEN["lenet5"][schedule]
+    assert rep.makespan_cycles == makespan
+    assert dict(rep.busy_cycles) == busy
+    if schedule == "serialized":
+        # §5.2 calibration: 2972 TensorGemm cycles (2942 loops + decode).
+        cr = cycle_model.analyze_programs(progs)
+        assert cr.tensor_gemm_cycles == 2972
+
+
+@pytest.mark.parametrize("schedule", ["serialized", "pipelined"])
+def test_resnet8_golden_module_counts(schedule):
+    progs = _resnet8_programs(schedule)
+    assert all(p.schedule == schedule for p in progs)
+    rep = cycle_model.simulate_programs(progs)
+    makespan, busy = GOLDEN["resnet8"][schedule]
+    assert rep.makespan_cycles == makespan
+    assert dict(rep.busy_cycles) == busy
+
+
+def test_resnet8_pipelining_buys_at_least_15pct():
+    """The PR's acceptance gate, pinned from the goldens so it cannot
+    silently erode: pipelined makespan ≤ 0.85 × serialized."""
+    serial, _ = GOLDEN["resnet8"]["serialized"]
+    piped, _ = GOLDEN["resnet8"]["pipelined"]
+    assert piped <= 0.85 * serial
+
+
+def test_default_schedule_is_byte_identical_to_serialized():
+    """Omitting ``schedule`` must emit the exact serialized stream — the
+    paper-calibrated default cannot drift when pipelining lands."""
+    from repro.core import isa
+    rng = np.random.default_rng(3)
+    A = rng.integers(-128, 128, (32, 48)).astype(np.int8)
+    B = rng.integers(-128, 128, (48, 32)).astype(np.int8)
+    default = compile_matmul(A, B, alu_ops=[AluImmOp.relu()])
+    explicit = compile_matmul(A, B, alu_ops=[AluImmOp.relu()],
+                              schedule="serialized")
+    assert default.schedule == explicit.schedule == "serialized"
+    assert (isa.encode_stream(default.instructions)
+            == isa.encode_stream(explicit.instructions))
+    assert default.segments["uop"] == explicit.segments["uop"]
+
+
+def test_pipelined_makespan_bounded_by_serialized_total():
+    """Model-level safety of the schedule choice, over random shapes:
+    max module busy ≤ makespan ≤ total busy (the in-order sweep can
+    never beat perfect overlap nor lose to full serialization), and the
+    pipelined makespan stays within the serialized schedule's total busy
+    cycles even when overlap buys nothing."""
+    rng = np.random.default_rng(77)
+    for _ in range(6):
+        m, k, n = (int(rng.integers(4, 60)) for _ in range(3))
+        A = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        B = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        rep = {}
+        for schedule in ("serialized", "pipelined"):
+            prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu()],
+                                  schedule=schedule)
+            rep[schedule] = cycle_model.simulate_program(prog)
+        for r in rep.values():
+            assert (max(r.busy_cycles.values()) <= r.makespan_cycles
+                    <= r.total_busy_cycles)
+        assert (rep["pipelined"].makespan_cycles
+                <= rep["serialized"].total_busy_cycles)
