@@ -6,10 +6,10 @@ throughput, simulator throughput) + the graph-compiled resnet_tiny rows
 (``resnet8/*``, DESIGN.md §Strided-lowering) + kernel micro-benches + the
 roofline summary from the latest dry-run sweep.  Output:
 ``name,value,paper,derived`` CSV rows, with PASS/DIFF annotations against
-the paper's numbers; the resnet_tiny / resnet8 measurements are
-additionally written to ``BENCH_resnet_tiny.json`` / ``BENCH_resnet8.json``
-(reproducible artifacts, gitignored) so the perf trajectory has
-machine-readable data points.
+the paper's numbers; the resnet_tiny / resnet8 / pallas-backend
+measurements are additionally written to ``BENCH_resnet_tiny.json`` /
+``BENCH_resnet8.json`` / ``BENCH_pallas.json`` (reproducible artifacts,
+gitignored) so the perf trajectory has machine-readable data points.
 
 Hardening (the CI contract):
 
@@ -68,6 +68,14 @@ def _kernel_rows():
             for row in kernel_bench.all_tables()]
 
 
+def _pallas_rows():
+    from benchmarks import pallas_tables
+    data = pallas_tables.collect()
+    pathlib.Path("BENCH_pallas.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return pallas_tables.all_tables(data)
+
+
 def _faults_rows():
     from benchmarks import fault_campaign
     data = fault_campaign.collect()
@@ -105,12 +113,13 @@ def _roofline_rows():
 # never swallow them.
 SECTIONS = (
     ("lenet", ("gemm_loops/", "cycles/", "dram/", "exec_", "equiv_",
-               "simd_", "compile/", "funcsim/", "sim/"), _lenet_rows),
+               "simd_", "compile/", "funcsim/"), _lenet_rows),
     ("cifar", ("cifar/",), _cifar_rows),
     ("resnet_tiny", ("graph/", "serve/resnet_tiny/"), _resnet_tiny_rows),
     ("resnet8", ("resnet8/",), _resnet8_rows),
     ("serving", ("serve/",), _serving_rows),
-    ("kernels", ("kernel/", "pallas/", "xla/", "hlo/"), _kernel_rows),
+    ("kernels", ("kernel/",), _kernel_rows),
+    ("pallas", ("pallas/",), _pallas_rows),
     ("faults", ("faults/",), _faults_rows),
     ("pipeline", ("pipeline/",), _pipeline_rows),
     ("roofline", ("roofline/",), _roofline_rows),

@@ -12,12 +12,14 @@ compiler pipeline with batched requests — the paper's own workload (§4.3).
 
     PYTHONPATH=src python examples/lenet5_e2e.py [--requests 16]
                                                  [--batch 8]
-                                                 [--backend fast|oracle]
+                                                 [--backend fast|oracle|pallas]
 
 ``--backend fast`` (the default) serves on the vectorised plan-compiling
 simulator; ``--backend oracle`` uses the per-struct reference interpreter
-(per-image serving only).  All paths are bit-exact — batching just gets
-there sooner (EXPERIMENTS.md §Serving).
+(per-image serving only); ``--backend pallas`` lowers each layer to the
+``vta_gemm`` MXU kernel (``interpret=True`` off-TPU, and batched serving
+via ``--batch``).  All paths are bit-exact — batching just gets there
+sooner (EXPERIMENTS.md §Serving).
 """
 
 import argparse
@@ -46,11 +48,12 @@ def main():
     ap.add_argument("--batch", type=int, default=1,
                     help="requests per batched VTA execution; 1 = serve "
                          "per-image (default: 1)")
-    ap.add_argument("--backend", choices=("fast", "oracle"), default="fast",
-                    help="functional-simulator backend for per-image "
-                         "serving (default: fast)")
+    ap.add_argument("--backend", choices=("fast", "oracle", "pallas"),
+                    default="fast",
+                    help="execution backend: fast/oracle simulators, or "
+                         "the vta_gemm Pallas kernel (default: fast)")
     args = ap.parse_args()
-    if args.batch > 1 and args.backend != "fast":
+    if args.batch > 1 and args.backend == "oracle":
         ap.error("--batch > 1 runs the batched engine; "
                  "--backend oracle is per-image only (use --batch 1)")
 
@@ -80,11 +83,12 @@ def main():
     logits_all = []
     serve_s = 0.0
     if args.batch > 1:
-        mode = f"batched (batch {args.batch})"
+        batch_backend = "pallas" if args.backend == "pallas" else "batched"
+        mode = f"batched (batch {args.batch}, {batch_backend})"
         for lo in range(0, len(images), args.batch):
             group = images[lo:lo + args.batch]
             t0 = time.perf_counter()
-            outs, _ = net.serve(group)
+            outs, _ = net.serve(group, backend=batch_backend)
             serve_s += time.perf_counter() - t0
             logits_all.extend(outs)
     else:

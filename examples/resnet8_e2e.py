@@ -18,8 +18,12 @@ a 1×1 mixing conv — ADD-pair rounds + one SHR, all on the TensorAlu.
 
     PYTHONPATH=src python examples/resnet8_e2e.py [--requests 8]
                                                   [--batch 8]
-                                                  [--backend fast|oracle]
+                                                  [--backend fast|oracle|pallas]
                                                   [--skip-oracle]
+
+``--backend pallas`` runs every layer through the ``vta_gemm`` MXU kernel
+(``interpret=True`` off-TPU) — residual joins, strided chunks and the GAP
+head all execute bit-identically to the simulators.
 """
 
 import argparse
@@ -55,12 +59,13 @@ def main():
     ap.add_argument("--batch", type=int, default=1,
                     help="requests per batched VTA execution; 1 = serve "
                          "per-image (default: 1)")
-    ap.add_argument("--backend", choices=("fast", "oracle"), default="fast",
+    ap.add_argument("--backend", choices=("fast", "oracle", "pallas"),
+                    default="fast",
                     help="backend for the per-image serving loop")
     ap.add_argument("--skip-oracle", action="store_true",
                     help="skip the oracle cross-check (CI smoke mode)")
     args = ap.parse_args()
-    if args.batch > 1 and args.backend != "fast":
+    if args.batch > 1 and args.backend == "oracle":
         ap.error("--batch > 1 runs the batched engine; "
                  "--backend oracle is per-image only (use --batch 1)")
 
@@ -94,10 +99,12 @@ def main():
     serve_s = 0.0
     logits_all = []
     if args.batch > 1:
-        mode = f"batched (batch {args.batch})"
+        batch_backend = "pallas" if args.backend == "pallas" else "batched"
+        mode = f"batched (batch {args.batch}, {batch_backend})"
         for lo in range(0, len(images), args.batch):
             t0 = time.perf_counter()
-            outs, _ = net.serve(images[lo:lo + args.batch])
+            outs, _ = net.serve(images[lo:lo + args.batch],
+                                backend=batch_backend)
             serve_s += time.perf_counter() - t0
             logits_all.extend(outs)
     else:

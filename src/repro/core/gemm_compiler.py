@@ -975,7 +975,7 @@ def compile_matmul(A: np.ndarray, B: np.ndarray, *,
 
     prog = VTAProgram(config=cfg, allocator=alloc, uops=uop_dram, name=name,
                       regions=regions, chunk_plan=plan,
-                      schedule=sched.name)
+                      schedule=sched.name, alu_ops=tuple(alu_ops))
     prog.set_segment("inp", inp_bin)
     prog.set_segment("wgt", wgt_bin)
     if has_x:

@@ -312,7 +312,7 @@ class NetworkProgram:
             sems.append(decode_layer_output(layer, out_mat))
         return sems[-1]
 
-    def serve(self, images, *, fault_hook=None,
+    def serve(self, images, *, backend: str = "batched", fault_hook=None,
               count_overflows: bool = False, guard=None):
         """Compile-once/serve-many batched inference (DESIGN.md §Batching).
 
@@ -325,6 +325,12 @@ class NetworkProgram:
         batch axis only amortises instruction decode and merges the
         per-instruction array work.
 
+        ``backend="batched"`` (default) runs the vectorised instruction
+        interpreter; ``backend="pallas"`` executes each layer as a fused
+        MXU kernel call over the whole stack
+        (:mod:`repro.core.pallas_backend`, ``interpret=True`` off-TPU) —
+        bit-identical to the simulators on its truncation path.
+
         Returns ``(stacked outputs, per-layer batch-total reports)``: the
         leading output axis is the request index.
 
@@ -334,9 +340,19 @@ class NetworkProgram:
         request (DESIGN.md §Hardening).
         """
         if guard is not None:
+            if backend != "batched":
+                raise ValueError(
+                    "guarded serving runs on the batched instruction "
+                    "interpreter (its watchdog and injection hooks are "
+                    "per-instruction); drop guard= or backend="
+                    f"{backend!r}")
             from repro.harden import guards as _guards
             return _guards.guarded_serve(self, images, guard,
                                          fault_hook=fault_hook)
+        if backend not in ("batched", "pallas"):
+            raise ValueError(
+                f"serve supports backend='batched' or 'pallas', got "
+                f"{backend!r}")
         imgs = self._as_image_list(images)
         from .fast_simulator import BatchFastSimulator, plan_for
         base = self.dram_image()
@@ -353,13 +369,22 @@ class NetworkProgram:
                 res_sems = imgs if rsrcs[k] < 0 else all_sems[rsrcs[k]]
                 self._stage_residual_batch(stack, layer, res_sems)
             # the loop owns ``stack`` and re-reads it from ``sim.dram``, so
-            # the simulator's defensive copy is skipped
-            sim = BatchFastSimulator(self.config, stack, copy_dram=False,
-                                     count_overflows=count_overflows)
-            reports.append(sim.run(layer.program.instructions,
-                                   plan=plan_for(layer.program),
-                                   fault_hook=self._layer_hook(fault_hook,
-                                                               k)))
+            # the engine's defensive copy is skipped
+            if backend == "pallas":
+                from .pallas_backend import BatchPallasSimulator
+                sim = BatchPallasSimulator(self.config, stack,
+                                           copy_dram=False)
+                reports.append(sim.run_program(
+                    layer.program,
+                    fault_hook=self._layer_hook(fault_hook, k)))
+            else:
+                sim = BatchFastSimulator(self.config, stack,
+                                         copy_dram=False,
+                                         count_overflows=count_overflows)
+                reports.append(sim.run(layer.program.instructions,
+                                       plan=plan_for(layer.program),
+                                       fault_hook=self._layer_hook(
+                                           fault_hook, k)))
             stack = sim.dram
             out_mats = decode_out_region_batch(layer.program, stack)
             all_sems.append([decode_layer_output(layer, m)

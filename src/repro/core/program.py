@@ -59,6 +59,11 @@ class VTAProgram:
     # "pipelined" compile that falls back (buffers too small to
     # double-buffer) records "serialized" here.
     schedule: str = "serialized"
+    # The ALU post-op spec the instruction stream implements (the
+    # gemm_compiler AluSpec tuple) — the semantic record the pallas
+    # backend lowers from (DESIGN.md §2).  ``None`` (hand-written
+    # streams) marks the program as not pallas-executable.
+    alu_ops: Optional[Tuple] = None
     # CRC32 of every segment, captured by finalize() — the integrity
     # reference the harden/ guards verify serves against (DESIGN.md
     # §Hardening).  Segment bytes are immutable, so the values stay valid

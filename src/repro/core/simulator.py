@@ -481,7 +481,7 @@ class FunctionalSimulator:
 # Backend selection + program-level drivers
 # ---------------------------------------------------------------------------
 
-BACKENDS = ("oracle", "fast", "batched")
+BACKENDS = ("oracle", "fast", "batched", "pallas")
 
 
 def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
@@ -495,7 +495,10 @@ def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
     oracle but executing each instruction as batched numpy ops.
     ``"batched"`` takes a ``(batch, nbytes)`` DRAM *stack* and executes the
     stream once over all images (DESIGN.md §Batching), bit-identical to
-    looping ``"oracle"`` over the stack's rows.
+    looping ``"oracle"`` over the stack's rows.  ``"pallas"`` executes
+    compiled programs as fused MXU kernel calls
+    (:mod:`repro.core.pallas_backend`, ``interpret=True`` off-TPU) —
+    bit-identical to the oracle on its default truncation path.
     """
     if backend == "oracle":
         return FunctionalSimulator(cfg, dram, trace=trace,
@@ -508,6 +511,10 @@ def make_simulator(cfg: VTAConfig, dram: np.ndarray, *,
         from .fast_simulator import BatchFastSimulator
         return BatchFastSimulator(cfg, dram, trace=trace,
                                   count_overflows=count_overflows)
+    if backend == "pallas":
+        from .pallas_backend import (BatchPallasSimulator, PallasSimulator)
+        cls = BatchPallasSimulator if dram.ndim == 2 else PallasSimulator
+        return cls(cfg, dram, trace=trace, count_overflows=count_overflows)
     raise ValueError(f"unknown simulator backend {backend!r}; "
                      f"expected one of {BACKENDS}")
 
@@ -518,10 +525,20 @@ def run_instructions(sim, instructions, *, program: Optional[VTAProgram] = None,
 
     On the fast backend, passing ``program`` reuses (or populates) the
     instruction plan cached on it, so repeated executions of the same
-    program (batch serving) skip plan compilation entirely.
+    program (batch serving) skip plan compilation entirely.  On the pallas
+    backend ``program`` is required — the engine lowers the compiled
+    program itself, not the instruction stream.
     ``fault_hook(sim, insn_idx)`` is forwarded to the backend's run loop.
     """
     from .fast_simulator import FastSimulator, plan_for
+    from .pallas_backend import PallasSimulator
+    if isinstance(sim, PallasSimulator):
+        if program is None:
+            raise ValueError(
+                "the pallas backend executes compiled programs; pass "
+                "program= to run_instructions (raw instruction streams "
+                "need a simulator backend)")
+        return sim.run_program(program, fault_hook=fault_hook)
     if isinstance(sim, FastSimulator) and program is not None:
         return sim.run(instructions, plan=plan_for(program),
                        fault_hook=fault_hook)
@@ -539,7 +556,9 @@ def run_program(prog: VTAProgram, *, trace: bool = False,
     ``backend="fast"`` selects the vectorised interpreter with the plan
     cached on ``prog``; ``backend="batched"`` routes through the batch
     engine with a batch of one (uniform dispatch — the real batched entry
-    point is :func:`run_program_batch`).
+    point is :func:`run_program_batch`); ``backend="pallas"`` executes the
+    program as a fused MXU kernel call (truncation path — bit-identical to
+    the oracle; see :mod:`repro.core.pallas_backend`).
     """
     if backend == "batched":
         outs, report = run_program_batch(prog, batch=1, trace=trace,
@@ -557,6 +576,7 @@ def run_program(prog: VTAProgram, *, trace: bool = False,
 
 def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
                       dram_stack: Optional[np.ndarray] = None,
+                      backend: str = "batched",
                       trace: bool = False, fault_hook=None,
                       count_overflows: bool = False
                       ) -> Tuple[np.ndarray, SimReport]:
@@ -567,10 +587,15 @@ def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
     per-request INP regions staged in) — or just ``batch`` to replicate
     ``prog.dram_image()``.  The instruction plan is compiled once and
     cached on ``prog`` (:func:`~repro.core.fast_simulator.plan_for`), so
-    repeated calls pay only the array work.  Returns the stacked decoded
+    repeated calls pay only the array work.  ``backend="pallas"`` executes
+    the stack through the fused-kernel engine instead (one stacked MXU
+    call when the batch shares weights).  Returns the stacked decoded
     ``(batch, M, N)`` results and the batch-total report.
     """
-    from .fast_simulator import plan_for
+    if backend not in ("batched", "pallas"):
+        raise ValueError(
+            f"run_program_batch supports backend='batched' or 'pallas', "
+            f"got {backend!r}")
     if dram_stack is None:
         if batch is None:
             raise ValueError("pass either dram_stack or batch")
@@ -580,10 +605,10 @@ def run_program_batch(prog: VTAProgram, *, batch: Optional[int] = None,
         raise ValueError(
             f"batch={batch} does not match dram_stack rows "
             f"{dram_stack.shape[0]}")
-    sim = make_simulator(prog.config, dram_stack, backend="batched",
+    sim = make_simulator(prog.config, dram_stack, backend=backend,
                          trace=trace, count_overflows=count_overflows)
-    report = sim.run(prog.instructions, plan=plan_for(prog),
-                     fault_hook=fault_hook)
+    report = run_instructions(sim, prog.instructions, program=prog,
+                              fault_hook=fault_hook)
     return decode_out_region_batch(prog, sim.dram), report
 
 

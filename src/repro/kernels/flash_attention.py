@@ -22,6 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.errors import CompileError
+
+# jax 0.4.x exposes this as TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -93,11 +99,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
-    assert h % hkv == 0, (h, hkv)
+    if h % hkv:
+        raise CompileError(
+            f"{h} query heads do not group over {hkv} KV heads",
+            constraint="kernel-gqa-heads")
     group = h // hkv
     if sm_scale is None:
         sm_scale = d ** -0.5
-    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    if sq % block_q or skv % block_k:
+        raise CompileError(
+            f"sequence lengths {(sq, skv)} not multiples of the attention "
+            f"blocks {(block_q, block_k)}; call through ops.attention, "
+            f"which pads", constraint="kernel-block-divisibility")
     n_q = sq // block_q
     n_kv = skv // block_k
     grid = (b, h, n_q, n_kv)
@@ -125,7 +138,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

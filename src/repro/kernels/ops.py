@@ -16,9 +16,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import CompileError
+
 from . import ref as _ref
 from .flash_attention import flash_attention as _flash
 from .vta_gemm import vta_gemm as _vta_gemm
+
+_BACKENDS = ("auto", "pallas", "xla")
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"kernel backend must be one of {_BACKENDS}, got {backend!r}")
 
 
 def _on_tpu() -> bool:
@@ -41,8 +51,13 @@ def vta_matmul(a: jax.Array, b: jax.Array,
     only if explicitly requested — interpret mode is for tests; "auto" off
     TPU uses the XLA reference, which is semantically identical).
     """
+    _check_backend(backend)
     m, k = a.shape
-    _, n = b.shape
+    k2, n = b.shape
+    if k != k2:
+        raise CompileError(
+            f"incompatible GEMM operand shapes {tuple(a.shape)} @ "
+            f"{tuple(b.shape)}", constraint="kernel-gemm-shape")
     if backend == "xla" or (backend == "auto" and not _on_tpu()):
         return _ref.vta_gemm_ref(a, b, bias, relu=relu, shift=shift,
                                  saturate=saturate, out_dtype=out_dtype)
@@ -66,6 +81,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               block_q: int = 128, block_k: int = 128,
               backend: str = "auto") -> jax.Array:
     """Flash attention with GQA; pads sequence dims to block multiples."""
+    _check_backend(backend)
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     if backend == "xla" or (backend == "auto" and not _on_tpu()):

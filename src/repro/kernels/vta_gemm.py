@@ -35,6 +35,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.errors import CompileError
+
+# jax 0.4.x exposes this as TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _gemm_kernel(a_ref, b_ref, bias_ref, out_ref, acc_ref, *,
                  n_k: int, relu: bool, shift: int, saturate: bool,
@@ -90,9 +96,15 @@ def vta_gemm(a: jax.Array, b: jax.Array,
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
-        f"unpadded shapes {(m, k, n)} vs blocks {(block_m, block_k, block_n)}")
+    if k != k2:
+        raise CompileError(
+            f"incompatible GEMM operand shapes {tuple(a.shape)} @ "
+            f"{tuple(b.shape)}", constraint="kernel-gemm-shape")
+    if m % block_m or n % block_n or k % block_k:
+        raise CompileError(
+            f"GEMM shape {(m, k, n)} not a multiple of the kernel blocks "
+            f"{(block_m, block_k, block_n)}; call through ops.vta_matmul, "
+            f"which pads", constraint="kernel-block-divisibility")
     n_k = k // block_k
     grid = (m // block_m, n // block_n, n_k)
 
@@ -121,7 +133,7 @@ def vta_gemm(a: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)

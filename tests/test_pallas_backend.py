@@ -1,0 +1,347 @@
+"""The Pallas backend contract (DESIGN.md §2, tests for PR 8).
+
+Three layers of pinning:
+
+* **kernel ↔ compiler semantics** — ``ops.vta_matmul`` (both the real
+  Pallas kernel in interpret mode and the XLA reference) against a numpy
+  transcription of ``gemm_compiler``'s requant reference: bias → ReLU →
+  arithmetic-SHR → int8 commit, on random int8 tiles, under *both*
+  ``saturate`` settings.  This is the differential test that pins the
+  relu-vs-SHR order, the floor rounding of SHR, and the
+  truncate-vs-saturate commit.
+* **program level** — ``run_program(backend="pallas")`` /
+  ``run_program_batch(backend="pallas")`` OUT bytes bit-identical to the
+  oracle on fused and general (pair/indexed/residual) programs; the
+  ``saturate=True`` upgrade equals ``clip`` of the pre-commit ACC.
+* **network level** — LeNet-5 and resnet8 served end-to-end on
+  ``backend="pallas"`` match the fast simulator bit for bit
+  (``serve_one``, ``run_functional``, batched ``serve``).
+
+Skips cleanly when jax is unavailable (the backend itself degrades to a
+typed ``CompileError`` with constraint ``pallas-jax-missing``).
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.core import isa                                      # noqa: E402
+from repro.core.dram import DramAllocator                       # noqa: E402
+from repro.core.errors import CompileError                      # noqa: E402
+from repro.core.gemm_compiler import (AluImmOp, AluIndexedImmOp,  # noqa: E402
+                                      AluPairOp, _wrap_int32,
+                                      compile_matmul)
+from repro.core.hwconfig import VTAConfig, vta_default          # noqa: E402
+from repro.core.layout import truncate_int8                     # noqa: E402
+from repro.core.pallas_backend import (BatchPallasSimulator,    # noqa: E402
+                                       PallasSimulator, plan_pallas,
+                                       run_program_pallas)
+from repro.core.program import VTAProgram                       # noqa: E402
+from repro.core.simulator import (BACKENDS, make_simulator,     # noqa: E402
+                                  run_program, run_program_batch,
+                                  verify_program)
+from repro.kernels import ops as kernel_ops                     # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Kernel ↔ compiler requant semantics (the PR's drift-pinning differential)
+# ---------------------------------------------------------------------------
+
+def _requant_reference(a, b, bias, *, relu, shift, saturate):
+    """``gemm_compiler``'s requant semantics in plain numpy: int32-wrapped
+    GEMM + preload, ReLU *before* SHR, floor-rounding arithmetic shift,
+    then the commit (truncation or the saturation upgrade)."""
+    acc = _wrap_int32(a.astype(np.int64) @ b.astype(np.int64))
+    if bias is not None:
+        acc = _wrap_int32(acc.astype(np.int64) + bias.astype(np.int64))
+    if relu:
+        acc = np.maximum(acc, 0)
+    if shift:
+        acc = _wrap_int32(acc.astype(np.int64) >> shift)
+    if saturate:
+        return np.clip(acc, -128, 127).astype(np.int8)
+    return truncate_int8(acc)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_kernel_matches_compiler_requant_semantics(backend):
+    """Random int8 tiles × {bias, relu, shift} × both saturate settings:
+    the kernel epilogue must equal the compiler's requant reference
+    elementwise.  The pallas leg runs the real kernel body in interpret
+    mode (multi-K-block shapes included)."""
+    rng = np.random.default_rng(808)
+    shapes = [(16, 16, 16), (1, 129, 130), (40, 300, 24)]
+    if backend == "xla":            # the lowered reference is cheap — fuzz
+        shapes += [(5, 7, 3), (64, 64, 64), (33, 257, 65)]
+    for m, k, n in shapes:
+        a = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        b = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        bias = rng.integers(-(2 ** 20), 2 ** 20, (n,)).astype(np.int32)
+        for use_bias in (False, True):
+            for relu in (False, True):
+                for shift in (0, 5):
+                    for saturate in (False, True):
+                        got = np.asarray(kernel_ops.vta_matmul(
+                            jnp.asarray(a), jnp.asarray(b),
+                            jnp.asarray(bias) if use_bias else None,
+                            relu=relu, shift=shift, saturate=saturate,
+                            backend=backend))
+                        want = _requant_reference(
+                            a, b, bias if use_bias else None,
+                            relu=relu, shift=shift, saturate=saturate)
+                        np.testing.assert_array_equal(
+                            got, want,
+                            err_msg=f"{backend} {(m, k, n)} bias={use_bias} "
+                                    f"relu={relu} shift={shift} "
+                                    f"saturate={saturate}")
+
+
+def test_saturate_and_truncation_disagree_only_out_of_range():
+    """The documented tolerance contract: the two commits agree wherever
+    the requant ACC already fits int8 and differ (clip vs low-8-bits)
+    outside — i.e. saturation is an upgrade, not a different epilogue."""
+    rng = np.random.default_rng(809)
+    a = rng.integers(-128, 128, (32, 64)).astype(np.int8)
+    b = rng.integers(-128, 128, (64, 32)).astype(np.int8)
+    acc = _wrap_int32(a.astype(np.int64) @ b.astype(np.int64))
+    trunc = np.asarray(kernel_ops.vta_matmul(
+        jnp.asarray(a), jnp.asarray(b), saturate=False, backend="pallas"))
+    sat = np.asarray(kernel_ops.vta_matmul(
+        jnp.asarray(a), jnp.asarray(b), saturate=True, backend="pallas"))
+    in_range = (acc >= -128) & (acc <= 127)
+    assert not in_range.all(), "tiles too small to exercise the contract"
+    np.testing.assert_array_equal(trunc[in_range], sat[in_range])
+    np.testing.assert_array_equal(sat, np.clip(acc, -128, 127))
+    np.testing.assert_array_equal(trunc, truncate_int8(acc))
+
+
+# ---------------------------------------------------------------------------
+# Program-level OUT-byte identity
+# ---------------------------------------------------------------------------
+
+def _out_bytes(prog, dram):
+    region = prog.regions["out"]
+    start = region.phys_addr - prog.allocator.offset
+    return np.asarray(dram)[..., start:start + region.nbytes]
+
+
+def test_fused_program_bit_identical_to_oracle():
+    """A bias+relu+shr program — the whole epilogue fuses into the
+    kernel; OUT bytes equal the oracle's and the decode matches the
+    compiler's expected output."""
+    rng = np.random.default_rng(810)
+    A = rng.integers(-128, 128, (21, 34)).astype(np.int8)
+    B = rng.integers(-128, 128, (34, 19)).astype(np.int8)
+    X = np.broadcast_to(
+        rng.integers(-1000, 1000, (1, 19)).astype(np.int32), (21, 19)).copy()
+    prog = compile_matmul(A, B, X=X,
+                          alu_ops=[AluImmOp.relu(), AluImmOp.shr(4)])
+    assert plan_pallas(prog).fused
+    verify_program(prog, backend="pallas")
+    out_o, _ = run_program(prog, backend="oracle")
+    out_p, rep = run_program(prog, backend="pallas")
+    np.testing.assert_array_equal(out_p, out_o)
+    assert rep.gemm_loops == prog.gemm_loops()
+
+
+def test_general_program_bit_identical_to_oracle():
+    """Pair + indexed ops (the pool lowering shapes) force the
+    kernel-GEMM + vectorised-TensorAlu path."""
+    rng = np.random.default_rng(811)
+    A = rng.integers(-128, 128, (16, 16)).astype(np.int8)
+    B = rng.integers(-128, 128, (16, 16)).astype(np.int8)
+    X = rng.integers(-(10 ** 6), 10 ** 6, (16, 16)).astype(np.int32)
+    pairs = tuple((d, d + 8) for d in range(8))
+    ops = [AluImmOp.relu(), AluPairOp(isa.AluOp.ADD, pairs),
+           AluIndexedImmOp(isa.AluOp.SHR, 3, tuple(range(8)))]
+    prog = compile_matmul(A, B, X=X, alu_ops=ops)
+    assert not plan_pallas(prog).fused
+    verify_program(prog, backend="pallas")
+    out_o, _ = run_program(prog, backend="oracle")
+    out_p, _ = run_program(prog, backend="pallas")
+    np.testing.assert_array_equal(out_p, out_o)
+
+
+def test_multi_chunk_program_bit_identical():
+    """Tiny SRAM → §3.3 multi-chunk instruction stream; the pallas
+    lowering works from the DRAM-level metadata, so the chunking must be
+    invisible."""
+    cfg = VTAConfig(inp_buff_vectors=64, wgt_buff_matrices=4,
+                    acc_buff_vectors=64, out_buff_vectors=64,
+                    uop_buff_entries=32)
+    rng = np.random.default_rng(812)
+    A = rng.integers(-64, 64, (50, 40)).astype(np.int8)
+    B = rng.integers(-64, 64, (40, 33)).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu(), AluImmOp.shr(2)],
+                          cfg=cfg)
+    assert prog.chunk_plan.n_chunks > 1
+    verify_program(prog, backend="pallas")
+
+
+def test_program_saturate_upgrade_clips_requant_acc():
+    """``saturate=True`` at the program level == clip of the requant ACC
+    (relu+shr applied, before the int8 commit) — and differs from the
+    truncation path on an overflowing program."""
+    rng = np.random.default_rng(813)
+    A = rng.integers(-128, 128, (8, 128)).astype(np.int8)
+    B = rng.integers(-128, 128, (128, 8)).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.shr(2)])
+    acc = _wrap_int32(A.astype(np.int64) @ B.astype(np.int64))
+    acc = _wrap_int32(acc.astype(np.int64) >> 2)
+    out_sat, _ = run_program_pallas(prog, saturate=True)
+    np.testing.assert_array_equal(out_sat, np.clip(acc, -128, 127))
+    out_trunc, _ = run_program_pallas(prog, saturate=False)
+    np.testing.assert_array_equal(out_trunc, truncate_int8(acc))
+    assert not np.array_equal(out_sat, out_trunc)
+
+
+def test_run_program_batch_pallas_matches_batched():
+    """The batched entry point with per-row INP variation: pallas rows ==
+    batched-simulator rows, including the OUT bytes."""
+    rng = np.random.default_rng(814)
+    A = rng.integers(-64, 64, (24, 20)).astype(np.int8)
+    B = rng.integers(-64, 64, (20, 17)).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu(), AluImmOp.shr(1)])
+    base = prog.dram_image()
+    stack = np.broadcast_to(base, (4, base.size)).copy()
+    region = prog.regions["inp"]
+    start = region.phys_addr - prog.allocator.offset
+    for r in range(1, 4):
+        stack[r, start:start + region.nbytes] = rng.integers(
+            0, 256, region.nbytes, dtype=np.uint8)
+    out_b, _ = run_program_batch(prog, dram_stack=stack.copy())
+    out_p, rep = run_program_batch(prog, dram_stack=stack.copy(),
+                                   backend="pallas")
+    np.testing.assert_array_equal(out_p, out_b)
+    assert rep.gemm_loops == 4 * prog.gemm_loops()
+
+
+def test_gemm_backend_xla_leg_equality():
+    """``gemm_backend="xla"`` routes the GEMM through the lowered
+    reference — same OUT bytes (the kernel and the reference share
+    semantics, so the backend choice is a deployment knob)."""
+    rng = np.random.default_rng(815)
+    A = rng.integers(-128, 128, (19, 23)).astype(np.int8)
+    B = rng.integers(-128, 128, (23, 31)).astype(np.int8)
+    prog = compile_matmul(A, B, alu_ops=[AluImmOp.relu(), AluImmOp.shr(3)])
+    out_k, _ = run_program_pallas(prog, gemm_backend="pallas")
+    out_x, _ = run_program_pallas(prog, gemm_backend="xla")
+    np.testing.assert_array_equal(out_k, out_x)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + typed error contracts (satellite: stable constraint ids)
+# ---------------------------------------------------------------------------
+
+def test_make_simulator_dispatch():
+    assert "pallas" in BACKENDS
+    cfg = vta_default()
+    sim = make_simulator(cfg, np.zeros(1024, np.uint8), backend="pallas")
+    assert isinstance(sim, PallasSimulator) and not sim.is_batch
+    bsim = make_simulator(cfg, np.zeros((2, 1024), np.uint8),
+                          backend="pallas")
+    assert isinstance(bsim, BatchPallasSimulator) and bsim.is_batch
+
+
+def test_kernel_constraint_ids():
+    a = jnp.zeros((16, 16), jnp.int8)
+    b_bad = jnp.zeros((8, 16), jnp.int8)
+    with pytest.raises(CompileError) as exc:
+        kernel_ops.vta_matmul(a, b_bad)
+    assert exc.value.constraint == "kernel-gemm-shape"
+    from repro.kernels.vta_gemm import vta_gemm
+    with pytest.raises(CompileError) as exc:
+        vta_gemm(a, jnp.zeros((16, 16), jnp.int8), block_m=256)
+    assert exc.value.constraint == "kernel-block-divisibility"
+    with pytest.raises(ValueError, match="kernel backend"):
+        kernel_ops.vta_matmul(a, jnp.zeros((16, 16), jnp.int8),
+                              backend="cuda")
+    assert issubclass(CompileError, ValueError)   # catchable either way
+
+
+def test_non_compiler_program_raises_typed_error():
+    """Hand-written streams carry no compiler metadata — the backend must
+    refuse with the stable constraint id, not misexecute."""
+    cfg = vta_default()
+    prog = VTAProgram(config=cfg, allocator=DramAllocator())
+    sim = PallasSimulator(cfg, np.zeros(1024, np.uint8))
+    with pytest.raises(CompileError) as exc:
+        sim.run_program(prog)
+    assert exc.value.constraint == "pallas-program-metadata"
+    with pytest.raises(CompileError) as exc:
+        sim.run([isa.FinishInsn()])
+    assert exc.value.constraint == "pallas-program-metadata"
+
+
+def test_unsupported_observability_raises():
+    """Per-instruction observability (trace, overflow counters, fault
+    hooks) has no meaning on a fused kernel call — loud errors, not
+    silent no-ops."""
+    cfg = vta_default()
+    rng = np.random.default_rng(816)
+    A = rng.integers(-8, 8, (4, 4)).astype(np.int8)
+    prog = compile_matmul(A, A, cfg=cfg)
+    with pytest.raises(ValueError, match="trace"):
+        PallasSimulator(cfg, prog.dram_image(), trace=True)
+    with pytest.raises(ValueError, match="trace"):
+        PallasSimulator(cfg, prog.dram_image(), count_overflows=True)
+    sim = PallasSimulator(cfg, prog.dram_image())
+    with pytest.raises(ValueError, match="fault_hook"):
+        sim.run_program(prog, fault_hook=lambda s, i: None)
+
+
+# ---------------------------------------------------------------------------
+# Network-level end-to-end (the tentpole's acceptance)
+# ---------------------------------------------------------------------------
+
+def _compiled_lenet():
+    from repro.models.lenet import (calibrate_shifts, lenet5_random_weights,
+                                    lenet5_specs)
+    from repro.core.network_compiler import compile_network
+    weights = lenet5_random_weights(seed=0)
+    rng = np.random.default_rng(7)
+    cal = [rng.integers(0, 128, (1, 1, 32, 32)).astype(np.int8)
+           for _ in range(4)]
+    shifts = calibrate_shifts(weights, cal)
+    return compile_network(lenet5_specs(weights, shifts),
+                           np.zeros((1, 1, 32, 32), np.int8))
+
+
+def test_lenet5_serving_bit_identical():
+    net = _compiled_lenet()
+    rng = np.random.default_rng(817)
+    img = rng.integers(0, 128, (1, 1, 32, 32)).astype(np.int8)
+    np.testing.assert_array_equal(net.serve_one(img, backend="pallas"),
+                                  net.serve_one(img, backend="fast"))
+    out_f, _ = net.run_functional(backend="fast")
+    out_p, _ = net.run_functional(backend="pallas")
+    np.testing.assert_array_equal(out_p, out_f)
+    batch = np.stack([rng.integers(0, 128, (1, 1, 32, 32)).astype(np.int8)
+                      for _ in range(3)])
+    out_b, _ = net.serve(batch)
+    out_pb, reps = net.serve(batch, backend="pallas")
+    np.testing.assert_array_equal(out_pb, out_b)
+    assert len(reps) == len(net.layers)
+
+
+def test_serve_rejects_bad_backend_and_guarded_pallas():
+    net = _compiled_lenet()
+    batch = np.zeros((2, 1, 1, 32, 32), np.int8)
+    with pytest.raises(ValueError, match="backend"):
+        net.serve(batch, backend="fast")
+    class _Policy:          # shape-only stand-in; rejected before use
+        pass
+    with pytest.raises(ValueError, match="guarded"):
+        net.serve(batch, backend="pallas", guard=_Policy())
+
+
+def test_resnet8_serving_bit_identical():
+    """Residual joins, stride-2 chunks and the GAP pair tree all ride the
+    general epilogue path end to end."""
+    from repro.models.resnet8 import compile_resnet8, synthetic_image
+    net, _ = compile_resnet8()
+    img = synthetic_image(5)
+    np.testing.assert_array_equal(net.serve_one(img, backend="pallas"),
+                                  net.serve_one(img, backend="fast"))
