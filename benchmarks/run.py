@@ -6,9 +6,10 @@ throughput, simulator throughput) + the graph-compiled resnet_tiny rows
 (``resnet8/*``, DESIGN.md §Strided-lowering) + kernel micro-benches + the
 roofline summary from the latest dry-run sweep.  Output:
 ``name,value,paper,derived`` CSV rows, with PASS/DIFF annotations against
-the paper's numbers; the resnet_tiny / resnet8 / pallas-backend
-measurements are additionally written to ``BENCH_resnet_tiny.json`` /
-``BENCH_resnet8.json`` / ``BENCH_pallas.json`` (reproducible artifacts,
+the paper's numbers; the resnet_tiny / resnet8 / pallas-backend /
+serving-latency measurements are additionally written to
+``BENCH_resnet_tiny.json`` / ``BENCH_resnet8.json`` /
+``BENCH_pallas.json`` / ``BENCH_serving.json`` (reproducible artifacts,
 gitignored) so the perf trajectory has machine-readable data points.
 
 Hardening (the CI contract):
@@ -59,6 +60,14 @@ def _resnet8_rows():
 def _serving_rows():
     from benchmarks import serving_tables
     return serving_tables.all_tables()
+
+
+def _servelat_rows():
+    from benchmarks import serving_latency_tables
+    data = serving_latency_tables.collect()
+    pathlib.Path("BENCH_serving.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return serving_latency_tables.all_tables(data)
 
 
 def _kernel_rows():
@@ -118,6 +127,7 @@ SECTIONS = (
     ("resnet_tiny", ("graph/", "serve/resnet_tiny/"), _resnet_tiny_rows),
     ("resnet8", ("resnet8/",), _resnet8_rows),
     ("serving", ("serve/",), _serving_rows),
+    ("servelat", ("servelat/",), _servelat_rows),
     ("kernels", ("kernel/",), _kernel_rows),
     ("pallas", ("pallas/",), _pallas_rows),
     ("faults", ("faults/",), _faults_rows),
@@ -129,7 +139,11 @@ SECTIONS = (
 # §Hardening zero-silent-data-corruption contract).
 EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles",
               "faults/lenet5/sdc_total", "faults/resnet8/sdc_total",
-              "pipeline/resnet8/makespan_reduction_ge_15pct"}
+              "pipeline/resnet8/makespan_reduction_ge_15pct",
+              "servelat/lenet5/bit_identity",
+              "servelat/resnet8/bit_identity",
+              "servelat/lenet5/deterministic_replay",
+              "servelat/resnet8/deterministic_replay"}
 
 
 def _section_matches(prefixes, only: str) -> bool:

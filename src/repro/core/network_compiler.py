@@ -30,6 +30,7 @@ import numpy as np
 from .conv_lowering import flatten_tensor, im2row_batch, tensor2mat
 from .cycle_model import CycleReport, analyze_programs
 from .dram import DramAllocator
+from .errors import CompileError
 from .hwconfig import VTAConfig, vta_default
 from .layer_compiler import (CompiledLayer, LayerSpec, compile_layer,
                              decode_layer_output, layer_matrices)
@@ -37,6 +38,13 @@ from .layout import (batch_matrix_to_binary, matrix_to_binary,
                      should_pad_height)
 from .simulator import (SimReport, decode_out_region, decode_out_region_batch,
                         make_simulator, run_instructions)
+
+# The real backend sets, enumerated once so refusal messages, the serving
+# engine (repro.serving.vta) and the tests never drift out of sync again:
+# ``serve`` executes a (batch, nbytes) DRAM stack — only the two batch
+# engines can; ``serve_one`` runs the per-image simulators/kernel.
+SERVE_BACKENDS = ("batched", "pallas")
+SERVE_ONE_BACKENDS = ("oracle", "fast", "pallas")
 
 
 @dataclasses.dataclass
@@ -167,6 +175,46 @@ class NetworkProgram:
         from .fast_simulator import plan_for
         return [plan_for(layer.program) for layer in self.layers]
 
+    def input_signature(self) -> Tuple[Tuple[int, ...], np.dtype]:
+        """(shape, dtype) one request image must have — the admission
+        contract the serving engine (DESIGN.md §Serving) validates at
+        submit time instead of failing layers deep into staging."""
+        return tuple(self.input_tensor.shape), np.dtype(np.int8)
+
+    def plan_shapes(self) -> List[Dict[str, int]]:
+        """Per-layer compiled geometry the serving layer batches against:
+        INP/OUT (and residual) region sizes plus chunk counts.  Purely
+        introspective — reading it never compiles or invalidates plans."""
+        shapes: List[Dict[str, int]] = []
+        for layer in self.layers:
+            regions = layer.program.regions
+            shapes.append({
+                "name": layer.spec.name,
+                "inp_nbytes": regions["inp"].nbytes,
+                "out_nbytes": regions["out"].nbytes,
+                "res_nbytes": (regions["res"].nbytes
+                               if "res" in regions else 0),
+                "n_chunks": layer.n_chunks,
+            })
+        return shapes
+
+    def padded_batch_sizes(self, max_batch: int) -> Tuple[int, ...]:
+        """The closed set of stack shapes the engine serves at: powers of
+        two up to ``max_batch`` (plus ``max_batch`` itself when it is not
+        a power of two).  Padding a formed batch up to the next rung
+        keeps the compile-once contract — the batch engines see a small
+        fixed family of ``(B, nbytes)`` stacks instead of one shape per
+        occupancy."""
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        sizes = []
+        b = 1
+        while b < max_batch:
+            sizes.append(b)
+            b *= 2
+        sizes.append(max_batch)
+        return tuple(sizes)
+
     def _stage_layer_input(self, dram_row: np.ndarray, layer: CompiledLayer,
                            semantic_input: np.ndarray) -> None:
         """§4.2 stage (ii) for one request: im2row/flatten → pad → split →
@@ -281,12 +329,23 @@ class NetworkProgram:
         are cached on the programs, so requests after the first pay no
         plan compilation.
 
+        ``backend`` is one of :data:`SERVE_ONE_BACKENDS` — ``"fast"``
+        (default, the vectorised plan-compiling interpreter), ``"oracle"``
+        (the per-struct reference interpreter) or ``"pallas"`` (fused MXU
+        kernel calls, :mod:`repro.core.pallas_backend`); the batch engine
+        is :meth:`serve`'s, not this path's.  All are bit-identical.
+
         ``guard`` (a :class:`repro.harden.GuardPolicy`) routes the request
         through the integrity-guarded path — CRC verification, instruction
         validation, bounded restore-and-retry — and changes the return
         value to ``(output, GuardReport)`` (DESIGN.md §Hardening).
         ``fault_hook(sim, layer_idx, insn_idx)`` fires before each
         instruction of each layer (the harden/ injection point)."""
+        if backend not in SERVE_ONE_BACKENDS:
+            raise CompileError(
+                f"serve_one supports backend in {SERVE_ONE_BACKENDS}, got "
+                f"{backend!r} (the batch engines 'batched'/'pallas' are "
+                f"serve()'s)", constraint="serve-one-backend")
         if guard is not None:
             from repro.harden import guards as _guards
             return _guards.guarded_serve_one(
@@ -341,18 +400,20 @@ class NetworkProgram:
         """
         if guard is not None:
             if backend != "batched":
-                raise ValueError(
+                raise CompileError(
                     "guarded serving runs on the batched instruction "
                     "interpreter (its watchdog and injection hooks are "
                     "per-instruction); drop guard= or backend="
-                    f"{backend!r}")
+                    f"{backend!r}", constraint="serve-guard-backend")
             from repro.harden import guards as _guards
             return _guards.guarded_serve(self, images, guard,
                                          fault_hook=fault_hook)
-        if backend not in ("batched", "pallas"):
-            raise ValueError(
-                f"serve supports backend='batched' or 'pallas', got "
-                f"{backend!r}")
+        if backend not in SERVE_BACKENDS:
+            raise CompileError(
+                f"serve supports backend in {SERVE_BACKENDS} (the "
+                f"per-image backends {SERVE_ONE_BACKENDS} are "
+                f"serve_one()'s), got {backend!r}",
+                constraint="serve-backend")
         imgs = self._as_image_list(images)
         from .fast_simulator import BatchFastSimulator, plan_for
         base = self.dram_image()

@@ -14,6 +14,11 @@ Three cache kinds, chosen per layer from the architecture's schedule
 
 Caches are built with the same (pattern × repeats) stacking as the model
 parameters so the decode step scans over layers.
+
+Legacy note: these are the seed's *LM* serving caches (legacy CI tier),
+consumed by :mod:`repro.serving.engine`.  The VTA CNN serving subsystem
+is :mod:`repro.serving.vta` (DESIGN.md §Serving) — stateless per-request
+inference over compiled plans, no KV caches.
 """
 
 from __future__ import annotations

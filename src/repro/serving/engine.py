@@ -10,6 +10,13 @@ the sharded sequence axis into the distributed flash-decode merge);
 windowed layers read the ring buffer; Mamba/RWKV layers advance their O(1)
 states.  The layer stack scans with the same (pattern × repeats) structure
 as training, so a 96-layer decode lowers as one pattern trace.
+
+Legacy note: this is the seed's *LM* (transformer prefill/decode)
+serving engine, exercised by the legacy CI tier only.  The VTA CNN
+serving subsystem — async request queue, dynamic batching, worker pool
+over compiled ``NetworkProgram`` plans — is :mod:`repro.serving.vta`
+(DESIGN.md §Serving); deployments of the accelerator path wire that
+package, not this module.
 """
 
 from __future__ import annotations

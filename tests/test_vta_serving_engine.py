@@ -1,0 +1,295 @@
+"""Threaded async serving engine tests (DESIGN.md §Serving).
+
+The contracts: every engine-served result is bit-identical to a direct
+``NetworkProgram.serve`` of the same images (both batch backends, lenet5
++ resnet8); the batch former honours its max-batch/max-wait policy edge
+cases (``max_wait=0`` immediate dispatch, ``max_batch=1`` degeneracy);
+backpressure is a typed ``QueueFull``; shutdown drains in-flight
+requests (or cancels them, typed, when asked not to); unknown backends
+are refused with stable constraint ids through both the engine path and
+the ``serve``/``serve_one`` front doors; and the accounting audit is
+clean after every drain.
+
+Hypothesis-free: tier-1 floor.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.errors import CompileError
+from repro.core.network_compiler import (SERVE_BACKENDS, SERVE_ONE_BACKENDS,
+                                         compile_network)
+from repro.models.lenet import (lenet5_random_weights, lenet5_specs,
+                                synthetic_digit)
+from repro.serving.vta import (BatchPolicy, QueueClosed, QueueFull,
+                               VTAServingEngine, request_images, serve_all)
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    return compile_network(lenet5_specs(lenet5_random_weights(0)),
+                           synthetic_digit(0))
+
+
+@pytest.fixture(scope="module")
+def resnet8():
+    from repro.models.resnet8 import compile_resnet8
+    net, _ = compile_resnet8()
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Differential bit-identity: engine == direct serve, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["batched", "pallas"])
+def test_lenet_engine_bit_identical_to_direct_serve(lenet, backend):
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    images = request_images(lenet, 6, seed=1)
+    policy = BatchPolicy(max_batch=4, max_wait_s=0.002)
+    with VTAServingEngine(lenet, policy=policy,
+                          backends=(backend,)) as engine:
+        outs, tickets = serve_all(engine, images)
+    direct, _ = lenet.serve(images, backend=backend)
+    np.testing.assert_array_equal(outs, direct)
+    # and identical to the default batched path (cross-backend identity)
+    base, _ = lenet.serve(images)
+    np.testing.assert_array_equal(outs, base)
+    assert engine.metrics.audit() == []
+    assert engine.metrics.drained()
+    assert all(t.record.backend == backend for t in tickets)
+
+
+@pytest.mark.parametrize("backend", ["batched", "pallas"])
+def test_resnet8_engine_bit_identical_to_direct_serve(resnet8, backend):
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    images = request_images(resnet8, 3, seed=2)
+    policy = BatchPolicy(max_batch=2, max_wait_s=0.002)
+    with VTAServingEngine(resnet8, policy=policy,
+                          backends=(backend,)) as engine:
+        outs, _ = serve_all(engine, images)
+    direct, _ = resnet8.serve(images, backend=backend)
+    np.testing.assert_array_equal(outs, direct)
+    assert engine.metrics.audit() == []
+
+
+def test_mixed_backend_worker_pool(lenet):
+    """batched + pallas workers drain one queue; whichever worker serves
+    a request is unobservable in the results."""
+    pytest.importorskip("jax")
+    images = request_images(lenet, 8, seed=3)
+    with VTAServingEngine(lenet,
+                          policy=BatchPolicy(max_batch=2, max_wait_s=0.0),
+                          backends=("batched", "pallas")) as engine:
+        outs, tickets = serve_all(engine, images)
+    direct, _ = lenet.serve(images)
+    np.testing.assert_array_equal(outs, direct)
+    assert {t.record.backend for t in tickets} <= {"batched", "pallas"}
+    assert engine.metrics.audit() == []
+
+
+# ---------------------------------------------------------------------------
+# Batch-former edge cases
+# ---------------------------------------------------------------------------
+
+def test_max_wait_zero_dispatches_immediately(lenet):
+    """max_wait=0: a lone request must never wait for batchmates."""
+    images = request_images(lenet, 4, seed=4)
+    policy = BatchPolicy(max_batch=8, max_wait_s=0.0)
+    with VTAServingEngine(lenet, policy=policy) as engine:
+        for img in images:                 # serial: one in flight at a time
+            ticket = engine.submit(img)
+            ticket.result(timeout=60.0)
+            assert ticket.record.batch_size == 1
+            assert ticket.record.padded_size == 1
+    assert engine.metrics.summary()["mean_batch_occupancy"] == 1.0
+
+
+def test_max_batch_one_degeneracy(lenet):
+    """max_batch=1 serves every request alone regardless of queue depth."""
+    images = request_images(lenet, 5, seed=5)
+    policy = BatchPolicy(max_batch=1, max_wait_s=0.05)
+    with VTAServingEngine(lenet, policy=policy) as engine:
+        outs, tickets = serve_all(engine, images)
+    direct, _ = lenet.serve(images)
+    np.testing.assert_array_equal(outs, direct)
+    assert all(t.record.batch_size == 1 and t.record.padded_size == 1
+               for t in tickets)
+
+
+def test_batches_pad_up_the_compiled_ladder(lenet):
+    """A 3-deep queue at max_batch=4 forms one padded batch: occupancy 3,
+    executed rows 4 (the next ladder rung)."""
+    images = request_images(lenet, 3, seed=6)
+    policy = BatchPolicy(max_batch=4, max_wait_s=0.2)
+    engine = VTAServingEngine(lenet, policy=policy)
+    tickets = [engine.submit(img) for img in images]  # queued pre-start
+    with engine:
+        outs = np.stack([t.result(timeout=60.0) for t in tickets])
+    direct, _ = lenet.serve(images)
+    np.testing.assert_array_equal(outs, direct)
+    assert [t.record.batch_size for t in tickets] == [3, 3, 3]
+    assert [t.record.padded_size for t in tickets] == [4, 4, 4]
+
+
+def test_backpressure_rejects_with_queue_full(lenet):
+    """Admissions beyond max_depth raise typed QueueFull; the queue
+    recovers once drained."""
+    images = request_images(lenet, 4, seed=7)
+    policy = BatchPolicy(max_batch=2, max_wait_s=0.0, max_depth=2)
+    engine = VTAServingEngine(lenet, policy=policy)   # not started: no drain
+    t0 = engine.submit(images[0])
+    t1 = engine.submit(images[1])
+    with pytest.raises(QueueFull) as exc:
+        engine.submit(images[2])
+    assert exc.value.depth == 2 and exc.value.max_depth == 2
+    assert engine.metrics.rejected == 1
+    with engine:                                      # start → drain → stop
+        np.testing.assert_array_equal(t0.result(timeout=60.0),
+                                      lenet.serve([images[0]])[0][0])
+        t1.result(timeout=60.0)
+    assert engine.metrics.drained()
+    assert engine.metrics.audit() == []
+
+
+def test_shutdown_drains_in_flight_requests(lenet):
+    """shutdown(drain=True) serves every queued request before joining."""
+    images = request_images(lenet, 6, seed=8)
+    policy = BatchPolicy(max_batch=4, max_wait_s=0.05)
+    engine = VTAServingEngine(lenet, policy=policy)
+    tickets = [engine.submit(img) for img in images]  # queued pre-start
+    engine.start()
+    engine.shutdown(drain=True)                       # immediate shutdown
+    assert all(t.done() for t in tickets)
+    direct, _ = lenet.serve(images)
+    np.testing.assert_array_equal(
+        np.stack([t.result() for t in tickets]), direct)
+    with pytest.raises(QueueClosed):
+        engine.submit(images[0])
+    engine.shutdown()                                 # idempotent
+
+
+def test_shutdown_without_drain_cancels_typed(lenet):
+    images = request_images(lenet, 3, seed=9)
+    engine = VTAServingEngine(
+        lenet, policy=BatchPolicy(max_batch=8, max_wait_s=10.0))
+    tickets = [engine.submit(img) for img in images]
+    engine.start()
+    engine.shutdown(drain=False)
+    resolved = 0
+    for t in tickets:
+        try:
+            t.result(timeout=60.0)
+            resolved += 1                  # a worker may have grabbed it
+        except QueueClosed:
+            pass
+    assert engine.metrics.cancelled + resolved == len(tickets)
+    assert engine.metrics.drained()
+
+
+# ---------------------------------------------------------------------------
+# Typed refusals: unknown backends through every front door
+# ---------------------------------------------------------------------------
+
+def test_engine_refuses_unknown_and_per_image_backends(lenet):
+    for bad in ("weird", "fast", "oracle"):
+        with pytest.raises(CompileError, match="backend") as exc:
+            VTAServingEngine(lenet, backends=(bad,))
+        assert exc.value.constraint == "serve-backend"
+    with pytest.raises(ValueError, match="at least one"):
+        VTAServingEngine(lenet, backends=())
+
+
+def test_serve_refuses_unknown_backend_typed(lenet):
+    images = request_images(lenet, 2, seed=10)
+    with pytest.raises(CompileError) as exc:
+        lenet.serve(images, backend="weird")
+    assert exc.value.constraint == "serve-backend"
+    assert all(b in str(exc.value) for b in SERVE_BACKENDS)
+
+
+def test_serve_one_refuses_batch_backends_typed(lenet):
+    img = request_images(lenet, 1, seed=11)[0]
+    for bad in ("batched", "weird"):
+        with pytest.raises(CompileError) as exc:
+            lenet.serve_one(img, backend=bad)
+        assert exc.value.constraint == "serve-one-backend"
+        assert all(b in str(exc.value) for b in SERVE_ONE_BACKENDS)
+
+
+def test_guarded_engine_requires_batched_workers(lenet):
+    from repro.harden import GuardPolicy
+    with pytest.raises(CompileError) as exc:
+        VTAServingEngine(lenet, backends=("batched", "pallas"),
+                         guard=GuardPolicy())
+    assert exc.value.constraint == "serve-guard-backend"
+
+
+def test_engine_rejects_mis_shaped_request(lenet):
+    engine = VTAServingEngine(lenet)
+    with pytest.raises(ValueError, match="signature"):
+        engine.submit(np.zeros((1, 3, 32, 32), np.int8))
+    assert engine.metrics.submitted == 0
+
+
+class _ExplodingNet:
+    """Minimal NetworkProgram stand-in whose serve always raises —
+    exercises the engine's failure path without corrupting a real net."""
+
+    def input_signature(self):
+        return ((1, 8, 8), np.dtype(np.int8))
+
+    def padded_batch_sizes(self, max_batch):
+        from repro.serving.vta import pad_ladder
+        return pad_ladder(max_batch)
+
+    def serve(self, images, backend="batched", guard=None):
+        raise RuntimeError("boom")
+
+
+def test_execution_failure_resolves_tickets_typed():
+    """A serve() that raises must fail the tickets with ServingError —
+    never leave them unresolved or silently wrong."""
+    from repro.serving.vta import ServingError
+    net = _ExplodingNet()
+    engine = VTAServingEngine(net, policy=BatchPolicy(max_batch=2,
+                                                      max_wait_s=0.0),
+                              warmup=False)
+    with engine:
+        ticket = engine.submit(np.zeros((1, 8, 8), np.int8))
+        with pytest.raises(ServingError, match="boom"):
+            ticket.result(timeout=60.0)
+    assert engine.metrics.failed == 1
+    assert engine.metrics.drained()
+
+
+def test_engine_start_is_single_shot_and_result_times_out(lenet):
+    engine = VTAServingEngine(lenet, warmup=False)
+    ticket = engine.submit(request_images(lenet, 1, seed=13)[0])
+    with pytest.raises(TimeoutError):     # no workers started yet
+        ticket.result(timeout=0.01)
+    engine.start()
+    ticket.result(timeout=60.0)
+    with pytest.raises(RuntimeError, match="started"):
+        engine.start()
+    engine.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Guarded serving under load
+# ---------------------------------------------------------------------------
+
+def test_guarded_engine_serves_clean_and_bit_identical(lenet):
+    from repro.harden import GuardPolicy
+    images = request_images(lenet, 4, seed=12)
+    policy = BatchPolicy(max_batch=2, max_wait_s=0.002)
+    with VTAServingEngine(lenet, policy=policy,
+                          guard=GuardPolicy()) as engine:
+        outs, tickets = serve_all(engine, images)
+    direct, _ = lenet.serve(images)
+    np.testing.assert_array_equal(outs, direct)
+    assert all(t.guard_report is not None
+               and t.guard_report.outcome == "clean" for t in tickets)
+    assert engine.metrics.audit() == []
