@@ -9,8 +9,9 @@ roofline summary from the latest dry-run sweep.  Output:
 the paper's numbers; the resnet_tiny / resnet8 / pallas-backend /
 serving-latency measurements are additionally written to
 ``BENCH_resnet_tiny.json`` / ``BENCH_resnet8.json`` /
-``BENCH_pallas.json`` / ``BENCH_serving.json`` (reproducible artifacts,
-gitignored) so the perf trajectory has machine-readable data points.
+``BENCH_pallas.json`` / ``BENCH_serving.json`` / ``BENCH_accuracy.json``
+(reproducible artifacts, gitignored) so the perf trajectory has
+machine-readable data points.
 
 Hardening (the CI contract):
 
@@ -93,6 +94,14 @@ def _faults_rows():
     return fault_campaign.all_tables(data)
 
 
+def _accuracy_rows():
+    from benchmarks import accuracy_tables
+    data = accuracy_tables.collect()
+    pathlib.Path("BENCH_accuracy.json").write_text(
+        json.dumps(data, indent=2) + "\n")
+    return accuracy_tables.all_tables(data)
+
+
 def _pipeline_rows():
     from benchmarks import pipeline_tables
     data = pipeline_tables.collect()
@@ -132,6 +141,7 @@ SECTIONS = (
     ("pallas", ("pallas/",), _pallas_rows),
     ("faults", ("faults/",), _faults_rows),
     ("pipeline", ("pipeline/",), _pipeline_rows),
+    ("accuracy", ("accuracy/",), _accuracy_rows),
     ("roofline", ("roofline/",), _roofline_rows),
 )
 
@@ -143,7 +153,11 @@ EXACT_ROWS = {"gemm_loops/total", "cycles/tensor_gemm", "simd_cpu_cycles",
               "servelat/lenet5/bit_identity",
               "servelat/resnet8/bit_identity",
               "servelat/lenet5/deterministic_replay",
-              "servelat/resnet8/deterministic_replay"}
+              "servelat/resnet8/deterministic_replay",
+              "accuracy/lenet5/int8_within_2pct_of_float",
+              "accuracy/resnet8/int8_within_2pct_of_float",
+              "accuracy/lenet5/pallas_spotcheck_bit_identical",
+              "accuracy/resnet8/pallas_spotcheck_bit_identical"}
 
 
 def _section_matches(prefixes, only: str) -> bool:

@@ -1,0 +1,96 @@
+"""Quantization front door end-to-end: float training → PTQ → accuracy.
+
+The one-command version of EXPERIMENTS.md §Accuracy:
+
+  1. train (or load from ``--checkpoint``) a float model on the
+     procedural digit dataset — hermetic, seeded, no network access;
+  2. post-training-quantize it with :func:`repro.quantize.
+     quantize_network` (power-of-2 weight scales, biases at accumulator
+     scale, the §4.2 activation-range scan under the device's requant
+     semantics);
+  3. serve the held-out test split through the batched VTA runtime and
+     report int8 vs float top-1 — exiting non-zero if int8 drifts more
+     than 2 points from float (the accuracy gate CI enforces).
+
+    PYTHONPATH=src python examples/quantize_eval.py [--net lenet5|resnet8|both]
+                                                    [--train-n N] [--eval-n N]
+                                                    [--calib-n N] [--epochs N]
+                                                    [--batch N] [--seed N]
+                                                    [--checkpoint PATH.npz]
+
+Sizes default from the ``ACCURACY_*`` env vars (falling back to the
+full-scale 4000-train / 2000-eval run), so the CI smoke step can shrink
+the split without a separate code path.  ``--checkpoint`` loads an
+existing ``.npz`` float checkpoint if present (the import path for real
+MNIST/ONNX-exported weights) and saves the trained one otherwise; with
+``--net both`` it is used as a per-net suffix template.
+"""
+
+import argparse
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.quantize import evaluate_net
+from benchmarks.accuracy_tables import GATE_POINTS
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="float front door -> PTQ -> dataset-scale accuracy")
+    ap.add_argument("--net", choices=("lenet5", "resnet8", "both"),
+                    default="both")
+    ap.add_argument("--train-n", type=int,
+                    default=_env_int("ACCURACY_TRAIN_N", 4000))
+    ap.add_argument("--eval-n", type=int,
+                    default=_env_int("ACCURACY_EVAL_N", 2000))
+    ap.add_argument("--calib-n", type=int,
+                    default=_env_int("ACCURACY_CALIB_N", 64))
+    ap.add_argument("--epochs", type=int,
+                    default=_env_int("ACCURACY_EPOCHS", 6))
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None,
+                    help=".npz float checkpoint to load if present / "
+                         "save after training")
+    args = ap.parse_args(argv)
+
+    nets = ("lenet5", "resnet8") if args.net == "both" else (args.net,)
+    print(f"net       float%   int8%    delta    pallas  "
+          f"(train={args.train_n} eval={args.eval_n} "
+          f"calib={args.calib_n} epochs={args.epochs})")
+    failed = False
+    for net in nets:
+        ckpt = args.checkpoint
+        if ckpt is not None and args.net == "both":
+            root, ext = os.path.splitext(ckpt)
+            ckpt = f"{root}.{net}{ext or '.npz'}"
+        rec = evaluate_net(net, train_n=args.train_n, eval_n=args.eval_n,
+                           calib_n=args.calib_n, epochs=args.epochs,
+                           seed=args.seed, batch=args.batch,
+                           checkpoint=ckpt)
+        # gate the published (2-decimal) delta — a raw-float boundary
+        # like 2.0000000000000018 must read as exactly 2.00 points
+        gate = round(rec["delta_points"], 2) <= GATE_POINTS
+        failed |= not gate
+        print(f"{net:<10}{rec['float_top1'] * 100:6.2f}  "
+              f"{rec['int8_top1'] * 100:6.2f}  "
+              f"{rec['delta_points']:+6.2f}{'' if gate else ' *FAIL*'}  "
+              f"{'bit-identical' if rec['pallas_spotcheck_bit_identical'] else 'MISMATCH'}")
+        if not rec["pallas_spotcheck_bit_identical"]:
+            failed = True
+    if failed:
+        print(f"accuracy gate FAILED (int8 must stay within "
+              f"{GATE_POINTS} points of float)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,18 @@ def truncate_int8(x: np.ndarray) -> np.ndarray:
     return np.asarray(x).astype(np.uint8).view(np.int8)
 
 
+def requant_int8(x: np.ndarray, *, saturate: bool = False) -> np.ndarray:
+    """Post-SHR ACC→OUT narrowing under the device's semantics: wrap
+    (:func:`truncate_int8`) by default, clip with ``saturate=True`` —
+    the same two modes the simulators expose.  The single definition
+    shared by execution *and* calibration (DESIGN.md §Quantization):
+    calibration advancing its images through any other narrowing would
+    choose shifts for a machine that does not exist."""
+    if saturate:
+        return np.clip(np.asarray(x), -128, 127).astype(np.int8)
+    return truncate_int8(x)
+
+
 def matrix_padding(mat: np.ndarray, block_size: int, *,
                    pad_height: bool = True) -> np.ndarray:
     """Zero-pad ``mat`` on the right/bottom to ``block_size`` multiples.

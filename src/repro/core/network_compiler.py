@@ -206,7 +206,11 @@ class NetworkProgram:
         fixed family of ``(B, nbytes)`` stacks instead of one shape per
         occupancy."""
         if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+            raise CompileError(
+                f"padding ladder needs max_batch >= 1, got {max_batch} "
+                f"(a degenerate ladder would defer the failure to "
+                f"padded_size deep inside a worker)",
+                constraint="ladder-max-batch")
         sizes = []
         b = 1
         while b < max_batch:
@@ -453,22 +457,36 @@ class NetworkProgram:
         return np.stack(all_sems[-1]), reports
 
 
-def calibrate_network_shifts(specs: Sequence[LayerSpec],
-                             images: Sequence[np.ndarray],
-                             margin: int = 1) -> List[int]:
+def calibrate_network(specs: Sequence[LayerSpec],
+                      images: Sequence[np.ndarray], *,
+                      margin: int = 1, saturate: bool = False
+                      ) -> Tuple[List[int], List[List[np.ndarray]]]:
     """Static per-layer requant shifts from a calibration set (§4.2
     discipline: shifts are fixed at compile time; the margin bit guards
     unseen inputs against int8 wrap-around).  Model-agnostic: works for
     any conv/fc chain with valid or same padding and avg/max pooling.
 
-    Layer k's input depends on shifts < k, so calibration is sequential.
+    Layer k's input depends on shifts < k, so calibration is sequential,
+    and the images advance through each layer under the *device's*
+    requant semantics (:func:`repro.core.layout.requant_int8` — wrap by
+    default, clip under ``saturate=True``), with pinned
+    ``spec.requant_shift`` values honoured exactly as :func:`compile_layer`
+    honours them.  Anything else calibrates downstream layers against
+    activations the machine never produces (DESIGN.md §Quantization).
+
+    Returns ``(shifts, traces)`` where ``traces[k][i]`` is layer ``k``'s
+    semantic output for calibration image ``i`` — bit-identical to what
+    ``serve``/``serve_one`` produce for the same image, which the
+    calibration-drift regression test asserts differentially.
     """
     from .conv_lowering import mat2tensor
     from .layer_compiler import (choose_requant_shift, layer_matrices,
                                  pool_divisor, pool_plan_for,
                                  reference_layer_acc)
+    from .layout import requant_int8
 
     shifts: List[int] = []
+    traces: List[List[np.ndarray]] = []
     currents = [np.asarray(img, np.int8) for img in images]
     for spec in specs:
         pool_div = 0
@@ -480,15 +498,17 @@ def calibrate_network_shifts(specs: Sequence[LayerSpec],
             pool_div = pool_divisor(plan)
             accs.append(reference_layer_acc(A, B, spec.bias, spec.relu, plan))
             geos.append((geo, plan))
-        m = max(int(np.abs(a).max(initial=0)) for a in accs)
-        shift = choose_requant_shift(np.asarray([m]),
-                                     already_shifted=pool_div) + margin
+        if spec.requant_shift is not None:
+            shift = spec.requant_shift
+        else:
+            stacked = np.concatenate([a.reshape(-1) for a in accs])
+            shift = choose_requant_shift(stacked,
+                                         already_shifted=pool_div) + margin
         shifts.append(shift)
         # advance every calibration image through this layer
         nxt = []
         for acc, (geo, plan) in zip(accs, geos):
-            out = acc >> (pool_div + shift)
-            out = np.clip(out, -128, 127).astype(np.int8)   # margin holds
+            out = requant_int8(acc >> (pool_div + shift), saturate=saturate)
             if spec.kind == "conv":
                 oh = plan.out_h if plan else geo.out_h
                 ow = plan.out_w if plan else geo.out_w
@@ -496,7 +516,18 @@ def calibrate_network_shifts(specs: Sequence[LayerSpec],
             else:
                 nxt.append(out)
         currents = nxt
-    return shifts
+        traces.append(list(currents))
+    return shifts, traces
+
+
+def calibrate_network_shifts(specs: Sequence[LayerSpec],
+                             images: Sequence[np.ndarray],
+                             margin: int = 1, *,
+                             saturate: bool = False) -> List[int]:
+    """Shift list only — see :func:`calibrate_network` (which also
+    returns the per-layer calibration trace)."""
+    return calibrate_network(specs, images, margin=margin,
+                             saturate=saturate)[0]
 
 
 def compile_network(specs: Sequence[LayerSpec], input_tensor: np.ndarray, *,

@@ -246,7 +246,7 @@ class RequantPlan:
 
 
 def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
-                 margin: int = 1) -> RequantPlan:
+                 margin: int = 1, on_linear=None) -> RequantPlan:
     """Fill every unpinned ``requant.shift`` / ``add.pre_shifts`` from a
     calibration set (mutates the graph nodes; §4.2 discipline: shifts are
     static, the margin bit guards unseen inputs).
@@ -258,6 +258,15 @@ def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
     same SHR).  At each add the larger-exponent operand gets a pre-shift
     equal to the exponent difference, so both residual operands reach the
     TensorAlu ADD in the same fixed-point scale.
+
+    ``on_linear(node, input_exp)`` — optional hook invoked on every
+    conv/fc node right before its first evaluation, with the planner's
+    scale exponent of the node's activation input.  PTQ
+    (:func:`repro.quantize.quantize_network`, DESIGN.md §Quantization)
+    uses it to quantise float weights in place at exactly the moment the
+    input scale is known: the hook may rewrite ``node.weights`` /
+    ``node.bias`` / ``node.weight_exp``, and planning continues over the
+    rewritten integer node.
     """
     if not calib:
         raise CompileError("empty calibration set", constraint="calibration")
@@ -308,6 +317,8 @@ def plan_requant(graph: Graph, calib: Sequence[np.ndarray], *,
             vals[name] = [np.asarray(img).astype(np.int64) for img in calib]
             exps[name] = 0
         else:
+            if node.kind in ("conv", "fc") and on_linear is not None:
+                on_linear(node, exps[refs[0]])
             vals[name] = [_eval_node(node, [vals[r][i] for r in refs],
                                      refs, {}) for i in range(len(calib))]
             if node.kind in ("conv", "fc"):

@@ -37,8 +37,8 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.graph import (Graph, GraphBuilder, compile_graph, evaluate_graph,
-                         plan_requant)
+from repro.graph import (Graph, GraphBuilder, compile_graph,
+                         evaluate_graph)
 
 # The linear (conv/fc) nodes of the topology, in order.
 LINEAR_NODES = ("stem", "b1a", "b1b", "t2a", "t2p", "t2b",
@@ -171,13 +171,16 @@ def calibrate_weight_exps(weights: Resnet8Weights,
     ≈ 0 — the trained-network situation.  The t3 branch then keeps one
     octave of gain per conv (``- 1``), so its join operands land two
     scales apart and the planner must equalise with a genuine on-device
-    pre-shift over the projection operand."""
-    probe = build_resnet8(weights)
-    plan = plan_requant(probe, list(calib), margin=margin)
-    exps = {name: plan.shifts[f"{name}_q"] for name in LINEAR_NODES}
-    exps["t3a"] -= 1
-    exps["t3b"] -= 1
-    return exps
+    pre-shift over the projection operand.
+
+    Delegates to the model-agnostic
+    :func:`repro.quantize.ptq.calibrate_integer_weight_exps` (imported
+    lazily so models/ does not pull the quantize stack at import time).
+    """
+    from repro.quantize.ptq import calibrate_integer_weight_exps
+    return calibrate_integer_weight_exps(
+        lambda: build_resnet8(weights), calib, LINEAR_NODES,
+        margin=margin, octave_keep=("t3a", "t3b"))
 
 
 def synthetic_image(seed: int = 0) -> np.ndarray:

@@ -32,8 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.graph import (Graph, GraphBuilder, compile_graph, evaluate_graph,
-                         plan_requant)
+from repro.graph import (Graph, GraphBuilder, compile_graph,
+                         evaluate_graph)
 
 # The linear (conv/fc) nodes of the topology, in order.
 LINEAR_NODES = ("stem", "b1a", "b1b", "mid", "b2a", "b2b", "head")
@@ -141,13 +141,15 @@ def calibrate_weight_exps(weights: ResnetTinyWeights,
     designed for.  The b2 block then deliberately keeps one octave of
     gain per conv (``- 1``), so its join operands land two scales apart
     and the planner must equalise with a genuine on-device pre-shift.
+
+    Delegates to the model-agnostic
+    :func:`repro.quantize.ptq.calibrate_integer_weight_exps` (imported
+    lazily so models/ does not pull the quantize stack at import time).
     """
-    probe = build_resnet_tiny(weights)
-    plan = plan_requant(probe, list(calib), margin=margin)
-    exps = {name: plan.shifts[f"{name}_q"] for name in LINEAR_NODES}
-    exps["b2a"] -= 1
-    exps["b2b"] -= 1
-    return exps
+    from repro.quantize.ptq import calibrate_integer_weight_exps
+    return calibrate_integer_weight_exps(
+        lambda: build_resnet_tiny(weights), calib, LINEAR_NODES,
+        margin=margin, octave_keep=("b2a", "b2b"))
 
 
 def synthetic_image(seed: int = 0) -> np.ndarray:

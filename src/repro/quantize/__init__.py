@@ -1,0 +1,30 @@
+"""Post-training quantization + accuracy validation (DESIGN.md
+§Quantization, EXPERIMENTS.md §Accuracy).
+
+The subsystem that turns "compiles bit-identically" into "serves correct
+answers at scale", in three stages:
+
+* :mod:`repro.quantize.digits` — a deterministic procedurally-generated
+  MNIST-like digit dataset (hermetic: every image is a pure function of
+  ``(seed, split, index)``);
+* :mod:`repro.quantize.train`  — the float front door: seeded JAX
+  training of float LeNet-5/resnet8 twins + the ``.npz`` checkpoint
+  import path;
+* :mod:`repro.quantize.ptq` / :mod:`repro.quantize.evaluate` — the
+  model-agnostic :func:`quantize_network` PTQ pipeline (weight-exp
+  scales, biases at accumulator scale, the §4.2 activation scan under
+  device requant semantics) and the dataset-scale serving harness.
+"""
+
+from .digits import digit_dataset, digit_image                  # noqa: F401
+from .evaluate import (backend_agreement, evaluate_net,          # noqa: F401
+                       int8_top1)
+from .models import float_model, lenet5_float_layers, \
+    resnet8_float_graph                                          # noqa: F401
+from .ptq import (INPUT_EXP, FloatLayer, QuantizedModel,         # noqa: F401
+                  calibrate_integer_weight_exps, choose_weight_exp,
+                  quantize_bias, quantize_images, quantize_network,
+                  quantize_weights)
+from .train import (NETS, float_top1, init_params,               # noqa: F401
+                    load_checkpoint, save_checkpoint, train_float,
+                    train_or_load)

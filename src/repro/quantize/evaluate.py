@@ -1,0 +1,97 @@
+"""Dataset-scale accuracy harness (EXPERIMENTS.md §Accuracy).
+
+Runs a held-out digit split through ``NetworkProgram.serve`` on the
+batched backend (with a pallas spot-check on a subset — the conformance
+contract makes the backends interchangeable, so spot-checking is a
+cross-check, not a coverage gap) and reports int8-vs-float top-1 deltas.
+``evaluate_net`` is the one-call pipeline the accuracy benchmark
+(:mod:`benchmarks.accuracy_tables`) and the example front door
+(``examples/quantize_eval.py``) both drive: train-or-load float weights
+→ PTQ → compile → serve the test split → accuracy table.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .digits import digit_dataset
+from .models import CHANNELS, float_model
+from .ptq import INPUT_EXP, quantize_images, quantize_network
+from .train import float_top1, train_or_load
+
+
+def int8_top1(net_prog, images: np.ndarray, labels: np.ndarray, *,
+              input_exp: int = INPUT_EXP, batch: int = 64,
+              backend: str = "batched") -> float:
+    """Top-1 accuracy of a compiled network over float images, served
+    through the batch engine in ``batch``-sized stacks."""
+    ints = quantize_images(images, input_exp=input_exp)
+    correct = 0
+    for lo in range(0, len(ints), batch):
+        chunk = ints[lo:lo + batch]
+        outs, _ = net_prog.serve(chunk, backend=backend)
+        preds = outs.reshape(len(chunk), -1).argmax(axis=1)
+        correct += int((preds == labels[lo:lo + len(chunk)]).sum())
+    return correct / len(ints)
+
+
+def backend_agreement(net_prog, images: np.ndarray, *,
+                      input_exp: int = INPUT_EXP,
+                      backends: Sequence[str] = ("batched", "pallas")
+                      ) -> bool:
+    """Bit-identity spot-check: every backend serves the same stack to
+    the same bytes (the conformance contract, checked live on real
+    quantised-from-float weights)."""
+    ints = quantize_images(images, input_exp=input_exp)
+    ref, _ = net_prog.serve(ints, backend=backends[0])
+    for be in backends[1:]:
+        outs, _ = net_prog.serve(ints, backend=be)
+        if not np.array_equal(ref, outs):
+            return False
+    return True
+
+
+def evaluate_net(net: str, *, train_n: int = 4000, eval_n: int = 2000,
+                 calib_n: int = 64, epochs: int = 6, seed: int = 0,
+                 batch: int = 64, margin: int = 0,
+                 checkpoint: Optional[str] = None,
+                 spotcheck_n: int = 8) -> Dict[str, object]:
+    """Float front door → PTQ → dataset-scale serve, one call.
+
+    Returns the accuracy record the benchmark publishes: float and int8
+    top-1 on the ``eval_n``-image held-out split, the delta in points,
+    and the pallas spot-check verdict.
+
+    ``margin=0`` by default: the §4.2 scan already sizes each shift so
+    the full calibration-set accumulator range fits int8 exactly, and an
+    extra guard octave costs real accuracy (one bit of logit resolution
+    per layer — measured ~4 points of top-1 on LeNet-5 digits).
+    """
+    channels = CHANNELS[net]
+    params = train_or_load(net, checkpoint=checkpoint, train_n=train_n,
+                           epochs=epochs, seed=seed)
+    test_x, test_y = digit_dataset(eval_n, seed=seed, split="test",
+                                   channels=channels)
+    calib_x, _ = digit_dataset(calib_n, seed=seed, split="calib",
+                               channels=channels)
+    facc = float_top1(net, params, test_x, test_y)
+    qm = quantize_network(float_model(net, params), calib_x, margin=margin)
+    prog = qm.compile()
+    iacc = int8_top1(prog, test_x, test_y, input_exp=qm.input_exp,
+                     batch=batch)
+    agree = backend_agreement(prog, test_x[:spotcheck_n],
+                              input_exp=qm.input_exp)
+    return {
+        "net": net,
+        "n_train": train_n,
+        "n_eval": eval_n,
+        "n_calib": calib_n,
+        "float_top1": facc,
+        "int8_top1": iacc,
+        "delta_points": (facc - iacc) * 100.0,
+        "pallas_spotcheck_bit_identical": bool(agree),
+        "weight_exps": {k: int(v) for k, v in qm.weight_exps.items()},
+        "shifts": {k: int(v) for k, v in qm.shifts.items()},
+    }

@@ -1,0 +1,253 @@
+"""Hermetic float front door: seeded JAX training + checkpoint import
+(DESIGN.md §Quantization).
+
+Two float reference models mirror the repo's two int8 topologies exactly
+— LeNet-5 (the flat :func:`repro.models.lenet.lenet5_specs` chain) and
+resnet8 (the :func:`repro.models.resnet8.build_resnet8` graph) — trained
+on the procedural digit dataset (:mod:`repro.quantize.digits`) with a
+hand-rolled Adam (the container has no optax; the paper's reference
+models were PyTorch, recorded in DESIGN.md).  Everything is seeded and
+CPU-scale, so the float checkpoints are reproducible bit streams, and
+``save_checkpoint``/``load_checkpoint`` round-trip them as plain ``.npz``
+parameter dicts — the import path real MNIST/ONNX-exported weights drop
+into later.
+
+Params are flat ``{name: float32 array}`` dicts whose keys equal the
+weight-field names of :class:`~repro.models.lenet.LeNetWeights` /
+:class:`~repro.models.resnet8.Resnet8Weights`, so the PTQ mapping is a
+field-for-field walk with no renaming layer.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, Optional
+
+import numpy as np
+
+NETS = ("lenet5", "resnet8")
+NET_CHANNELS = {"lenet5": 1, "resnet8": 3}
+
+# (name, kind, shape) per net — shapes match the int8 models exactly.
+_LENET_SHAPES = (
+    ("conv1_w", (6, 1, 5, 5)), ("conv1_b", (6,)),
+    ("conv2_w", (16, 6, 5, 5)), ("conv2_b", (16,)),
+    ("conv3_w", (120, 16, 5, 5)), ("conv3_b", (120,)),
+    ("fc4_w", (120, 84)), ("fc4_b", (84,)),
+    ("fc5_w", (84, 10)), ("fc5_b", (10,)),
+)
+_RESNET8_SHAPES = (
+    ("stem_w", (16, 3, 3, 3)), ("stem_b", (16,)),
+    ("b1a_w", (16, 16, 3, 3)), ("b1a_b", (16,)),
+    ("b1b_w", (16, 16, 3, 3)), ("b1b_b", (16,)),
+    ("t2a_w", (32, 16, 3, 3)), ("t2a_b", (32,)),
+    ("t2p_w", (32, 16, 2, 2)), ("t2p_b", (32,)),
+    ("t2b_w", (32, 32, 3, 3)), ("t2b_b", (32,)),
+    ("t3a_w", (64, 32, 3, 3)), ("t3a_b", (64,)),
+    ("t3p_w", (64, 32, 2, 2)), ("t3p_b", (64,)),
+    ("t3b_w", (64, 64, 3, 3)), ("t3b_b", (64,)),
+    ("head_w", (64, 64, 1, 1)), ("head_b", (64,)),
+    ("fc_w", (64, 10)), ("fc_b", (10,)),
+)
+_NET_SHAPES = {"lenet5": _LENET_SHAPES, "resnet8": _RESNET8_SHAPES}
+
+
+def _check_net(net: str) -> None:
+    if net not in NETS:
+        raise ValueError(f"net must be one of {NETS}, got {net!r}")
+
+
+def init_params(net: str, seed: int = 0) -> Dict[str, np.ndarray]:
+    """He-initialised float32 parameters (numpy, deterministic)."""
+    _check_net(net)
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for name, shape in _NET_SHAPES[net]:
+        if name.endswith("_b"):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = int(np.prod(shape[1:])) if len(shape) == 4 \
+                else shape[0]
+            std = np.sqrt(2.0 / fan_in)
+            params[name] = rng.normal(0.0, std, shape).astype(np.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Float forwards (batched; mirror the int8 topologies node for node)
+# ---------------------------------------------------------------------------
+
+def _jx():
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    return jax, jnp, lax
+
+
+def lenet5_apply(params, x):
+    """Float logits ``(B, 10)`` for ``(B, 1, 32, 32)`` images — the
+    float twin of :func:`repro.models.lenet.lenet5_specs`."""
+    _, jnp, lax = _jx()
+    x = jnp.asarray(x, jnp.float32)
+
+    def conv(x, w, b, pool):
+        y = lax.conv_general_dilated(
+            x, jnp.asarray(w), (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        y = jnp.maximum(y + jnp.asarray(b)[None, :, None, None], 0)
+        if pool:
+            y = (y[:, :, 0::2, 0::2] + y[:, :, 0::2, 1::2]
+                 + y[:, :, 1::2, 0::2] + y[:, :, 1::2, 1::2]) / 4.0
+        return y
+
+    x = conv(x, params["conv1_w"], params["conv1_b"], True)
+    x = conv(x, params["conv2_w"], params["conv2_b"], True)
+    x = conv(x, params["conv3_w"], params["conv3_b"], False)
+    v = x.reshape(x.shape[0], -1)
+    v = jnp.maximum(v @ params["fc4_w"] + params["fc4_b"], 0)
+    return v @ params["fc5_w"] + params["fc5_b"]
+
+
+def resnet8_apply(params, x):
+    """Float logits ``(B, 10)`` for ``(B, 3, 32, 32)`` images — the
+    float twin of :func:`repro.models.resnet8.build_resnet8` (same
+    joins, stride-2 transitions, k2/s2 projections, GAP head)."""
+    _, jnp, lax = _jx()
+    x = jnp.asarray(x, jnp.float32)
+
+    def conv(name, x, stride=1, padding=0, relu=True):
+        y = lax.conv_general_dilated(
+            x, jnp.asarray(params[f"{name}_w"]), (stride, stride),
+            [(padding, padding), (padding, padding)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        y = y + jnp.asarray(params[f"{name}_b"])[None, :, None, None]
+        return jnp.maximum(y, 0) if relu else y
+
+    v = conv("stem", x, padding=1)
+    a = conv("b1a", v, padding=1)
+    b = conv("b1b", a, padding=1, relu=False)
+    v = jnp.maximum(b + v, 0)
+    a = conv("t2a", v, stride=2, padding=1)
+    p = conv("t2p", v, stride=2, relu=False)
+    b = conv("t2b", a, padding=1, relu=False)
+    v = jnp.maximum(b + p, 0)
+    a = conv("t3a", v, stride=2, padding=1)
+    p = conv("t3p", v, stride=2, relu=False)
+    b = conv("t3b", a, padding=1, relu=False)
+    v = jnp.maximum(b + p, 0)
+    h = conv("head", v)
+    g = h.mean(axis=(2, 3))
+    return g @ params["fc_w"] + params["fc_b"]
+
+
+APPLY_FNS = {"lenet5": lenet5_apply, "resnet8": resnet8_apply}
+
+
+# ---------------------------------------------------------------------------
+# Training (hand-rolled Adam; no optax in the container)
+# ---------------------------------------------------------------------------
+
+def train_float(net: str, images: np.ndarray, labels: np.ndarray, *,
+                epochs: int = 6, batch: int = 64, lr: float = 1e-3,
+                seed: int = 0) -> Dict[str, np.ndarray]:
+    """Train the float model with seeded shuffling + Adam; returns the
+    trained parameter dict (numpy float32)."""
+    jax, jnp, _ = _jx()
+    _check_net(net)
+    apply_fn = APPLY_FNS[net]
+    params = {k: jnp.asarray(v) for k, v in init_params(net, seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_fn(p, x, y):
+        logits = apply_fn(p, x)
+        logz = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logz, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, m, v, t, x, y):
+        grads = jax.grad(loss_fn)(p, x, y)
+        m = {k: b1 * m[k] + (1 - b1) * grads[k] for k in p}
+        v = {k: b2 * v[k] + (1 - b2) * grads[k] ** 2 for k in p}
+        mc = 1.0 - b1 ** t
+        vc = 1.0 - b2 ** t
+        p = {k: p[k] - lr * (m[k] / mc) / (jnp.sqrt(v[k] / vc) + eps)
+             for k in p}
+        return p, m, v
+
+    images = np.asarray(images, np.float32)
+    labels = np.asarray(labels, np.int32)
+    rng = np.random.default_rng(seed + 1)
+    t = 0
+    for _ in range(epochs):
+        order = rng.permutation(len(images))
+        for lo in range(0, len(images) - batch + 1, batch):
+            idx = order[lo:lo + batch]
+            t += 1
+            params, m, v = step(params, m, v, float(t),
+                                jnp.asarray(images[idx]),
+                                jnp.asarray(labels[idx]))
+    return {k: np.asarray(p, np.float32) for k, p in params.items()}
+
+
+def float_top1(net: str, params: Dict[str, np.ndarray],
+               images: np.ndarray, labels: np.ndarray, *,
+               batch: int = 256) -> float:
+    """Float top-1 accuracy (batched forward, no training state)."""
+    apply_fn = APPLY_FNS[net]
+    correct = 0
+    for lo in range(0, len(images), batch):
+        logits = np.asarray(apply_fn(params, images[lo:lo + batch]))
+        correct += int((logits.argmax(axis=1)
+                        == labels[lo:lo + batch]).sum())
+    return correct / len(images)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint import path (plain .npz — ONNX/MNIST exports drop in here)
+# ---------------------------------------------------------------------------
+
+def save_checkpoint(path, params: Dict[str, np.ndarray]) -> None:
+    np.savez(path, **{k: np.asarray(v, np.float32)
+                      for k, v in params.items()})
+
+
+def load_checkpoint(path,
+                    net: Optional[str] = None) -> Dict[str, np.ndarray]:
+    """Load a ``.npz`` float checkpoint; with ``net`` given, validate
+    the parameter names and shapes against the topology."""
+    with np.load(path) as z:
+        params = {k: np.asarray(z[k], np.float32) for k in z.files}
+    if net is not None:
+        _check_net(net)
+        want = {name: shape for name, shape in _NET_SHAPES[net]}
+        if set(params) != set(want):
+            raise ValueError(
+                f"checkpoint params {sorted(params)} != {net} topology "
+                f"params {sorted(want)}")
+        for name, shape in want.items():
+            if params[name].shape != shape:
+                raise ValueError(
+                    f"checkpoint param {name!r} has shape "
+                    f"{params[name].shape}, {net} expects {shape}")
+    return params
+
+
+def train_or_load(net: str, *, checkpoint=None, train_n: int = 4000,
+                  epochs: int = 6, batch: int = 64, lr: float = 1e-3,
+                  seed: int = 0) -> Dict[str, np.ndarray]:
+    """The front door: load ``checkpoint`` if it exists, else train on
+    the procedural digit dataset (and save to ``checkpoint`` when a path
+    is given) — hermetic either way."""
+    from .digits import digit_dataset
+    _check_net(net)
+    if checkpoint is not None and pathlib.Path(checkpoint).exists():
+        return load_checkpoint(checkpoint, net)
+    images, labels = digit_dataset(train_n, seed=seed, split="train",
+                                   channels=NET_CHANNELS[net])
+    params = train_float(net, images, labels, epochs=epochs, batch=batch,
+                         lr=lr, seed=seed)
+    if checkpoint is not None:
+        save_checkpoint(checkpoint, params)
+    return params

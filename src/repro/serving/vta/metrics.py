@@ -21,7 +21,9 @@ recount of the SLO-violation counter.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
+from fractions import Fraction
 from typing import Dict, List, Optional
 
 
@@ -57,11 +59,22 @@ class RequestRecord:
 
 
 def nearest_rank(sorted_values: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]) on an ascending list."""
+    """Nearest-rank percentile (q in [0, 100]) on an ascending list:
+    the element at rank ``ceil(q·n/100)`` (1-based; rank 1 for q=0).
+
+    The ceiling is computed *exactly* over the rational ``q·n/100``
+    (``fractions.Fraction``, no float product): the old
+    ``int(q * n)`` truncated the product before the ceiling division,
+    silently under-ranking every non-integer quantile — p99.9 of 1000
+    samples read rank 999 instead of 1000.
+    """
     if not sorted_values:
         raise ValueError("percentile of an empty sample")
-    rank = max(1, -(-int(q * len(sorted_values)) // 100))  # ceil(q*n/100)
-    return sorted_values[min(rank, len(sorted_values)) - 1]
+    if not 0 <= q <= 100:
+        raise ValueError(f"quantile must be in [0, 100], got {q}")
+    n = len(sorted_values)
+    rank = max(1, math.ceil(Fraction(q) * n / 100))
+    return sorted_values[min(rank, n) - 1]
 
 
 class ServingMetrics:

@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.core.errors import CompileError
+
 
 @dataclasses.dataclass(frozen=True)
 class BatchPolicy:
@@ -50,7 +52,14 @@ class BatchPolicy:
 
     def __post_init__(self):
         if self.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+            # typed + constraint-tagged: the policy is where a degenerate
+            # ladder is born, so it is rejected here at construction (and
+            # again in pad_ladder for direct callers) instead of as a bare
+            # ValueError deep in padded_size (CompileError subclasses
+            # ValueError, so pre-existing catchers keep working)
+            raise CompileError(
+                f"max_batch must be >= 1, got {self.max_batch}",
+                constraint="policy-max-batch")
         if self.max_wait_s < 0:
             raise ValueError(
                 f"max_wait_s must be >= 0, got {self.max_wait_s}")
@@ -79,7 +88,14 @@ def ready_count(pending: int, oldest_enqueue_t: float, now: float,
 def pad_ladder(max_batch: int) -> Tuple[int, ...]:
     """The closed set of compiled batch shapes: powers of two up to
     ``max_batch``, plus ``max_batch`` itself when it is not a power of
-    two."""
+    two.  Non-positive ``max_batch`` is rejected with a typed
+    :class:`~repro.core.errors.CompileError` — the old code silently
+    returned the degenerate ladder ``(0,)``, deferring the failure to a
+    bare ``ValueError`` in :func:`padded_size` at dispatch time."""
+    if max_batch < 1:
+        raise CompileError(
+            f"padding ladder needs max_batch >= 1, got {max_batch}",
+            constraint="ladder-max-batch")
     sizes = []
     b = 1
     while b < max_batch:

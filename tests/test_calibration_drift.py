@@ -1,0 +1,120 @@
+"""Calibration/execution semantic drift — the differential regression
+suite for the `np.clip`-vs-`truncate_int8` bug (DESIGN.md §Quantization).
+
+`calibrate_network` advances its calibration images layer by layer; the
+device requants through the wrapping ACC→OUT truncation.  The pre-fix
+code (a) advanced with saturating ``np.clip`` and (b) ignored pinned
+``spec.requant_shift`` values — so the moment a pinned shift lets a
+calibration activation leave int8, calibration computed downstream
+ranges for a machine that does not exist.  The tests here prove, bit
+for bit, that the fixed calibration trace equals what ``serve`` /
+``serve_one`` produce for the same images, and that the legacy clip
+semantics (still reachable via ``saturate=True``) produces a *different*
+trace on the same network — i.e. this suite fails on the pre-fix path.
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.layer_compiler import LayerSpec
+from repro.core.layout import requant_int8, truncate_int8
+from repro.core.network_compiler import (calibrate_network,
+                                         calibrate_network_shifts,
+                                         compile_network)
+from repro.models.lenet import lenet5_random_weights, lenet5_specs, \
+    synthetic_digit
+
+
+def test_requant_int8_wrap_vs_saturate_semantics():
+    v = np.array([200, -300, 127, -128, 0], dtype=np.int64)
+    assert np.array_equal(requant_int8(v), truncate_int8(v))
+    assert requant_int8(np.array([200]))[0] == -56          # wraps
+    assert requant_int8(np.array([200]), saturate=True)[0] == 127
+    assert requant_int8(np.array([-300]), saturate=True)[0] == -128
+    # in-range values are identical under both semantics
+    inr = np.arange(-128, 128, dtype=np.int64)
+    assert np.array_equal(requant_int8(inr),
+                          requant_int8(inr, saturate=True))
+
+
+def _wrapping_pinned_specs():
+    """A 2-layer fc chain whose pinned layer-1 shift wraps on the
+    calibration images (but not on the all-zeros compile input)."""
+    w1 = (2 * np.eye(4)).astype(np.int8)
+    w2 = np.array([[1, 1, -1], [1, -1, 1], [-1, 1, 1], [1, 1, 1]],
+                  dtype=np.int8)
+    specs = [
+        LayerSpec("a", "fc", w1, requant_shift=0),     # pinned: acc ±200
+        LayerSpec("b", "fc", w2),                      # unpinned
+    ]
+    images = [np.array([[100, -100, 50, -50]], dtype=np.int8),
+              np.array([[90, 80, -90, -80]], dtype=np.int8)]
+    return specs, images
+
+
+def test_calibration_honours_pinned_shifts():
+    specs, images = _wrapping_pinned_specs()
+    shifts, _ = calibrate_network(specs, images)
+    assert shifts[0] == 0                       # pinned value, not rechosen
+    assert calibrate_network_shifts(specs, images)[0] == 0
+
+
+def test_calibration_trace_bit_identical_to_serve_on_wrap():
+    """THE regression test: with a pinned shift that wraps on the
+    calibration set, the calibration trace must still equal device
+    execution exactly — the pre-fix np.clip path diverges here."""
+    specs, images = _wrapping_pinned_specs()
+    shifts, traces = calibrate_network(specs, images)
+    pinned = [dataclasses.replace(s, requant_shift=sh)
+              for s, sh in zip(specs, shifts)]
+    net = compile_network(pinned, np.zeros((1, 4), dtype=np.int8))
+    for i, img in enumerate(images):
+        for backend in ("oracle", "fast"):
+            out = net.serve_one(img, backend=backend)
+            np.testing.assert_array_equal(
+                out, traces[-1][i],
+                err_msg=f"calibration trace != {backend} execution for "
+                        f"image {i}")
+    outs, _ = net.serve(list(images))
+    np.testing.assert_array_equal(outs, np.stack(traces[-1]))
+    # the wrap genuinely happened: layer-1 activations left [-128, 127]
+    # pre-truncation, so clip and wrap disagree on this network ...
+    _, clip_traces = calibrate_network(specs, images, saturate=True)
+    assert not all(np.array_equal(a, b) for a, b in
+                   zip(traces[-1], clip_traces[-1])), \
+        "test network no longer exercises the wrap path"
+    # ... and the clip-advanced (pre-fix) trace does NOT match the device
+    assert not all(
+        np.array_equal(net.serve_one(img, backend="fast"), clip_traces[-1][i])
+        for i, img in enumerate(images))
+
+
+def test_saturate_trace_matches_clip_semantics():
+    """The saturate=True leg follows the documented clip semantics."""
+    specs, images = _wrapping_pinned_specs()
+    _, clip_traces = calibrate_network(specs, images, saturate=True)
+    acc0 = images[0].astype(np.int64) @ specs[0].weights.astype(np.int64)
+    np.testing.assert_array_equal(
+        clip_traces[0][0],
+        np.clip(acc0 >> 0, -128, 127).astype(np.int8))
+
+
+def test_unpinned_calibration_trace_matches_serve_lenet5():
+    """General differential check on the real model: for unpinned
+    LeNet-5, calibration-chosen shifts keep every activation in range,
+    and the per-layer trace is bit-identical to batched serving."""
+    weights = lenet5_random_weights(seed=7)
+    images = [synthetic_digit(s) for s in range(1, 5)]
+    shifts, traces = calibrate_network(lenet5_specs(weights), images)
+    net = compile_network(lenet5_specs(weights, shifts), images[0])
+    outs, _ = net.serve(list(images))
+    np.testing.assert_array_equal(outs, np.stack(traces[-1]))
+    # no-wrap invariant: the clip- and wrap-advanced traces agree at
+    # *every* layer when shifts were chosen by calibration itself
+    _, clip_traces = calibrate_network(lenet5_specs(weights), images,
+                                       saturate=True)
+    for k, (layer_t, layer_c) in enumerate(zip(traces, clip_traces)):
+        for a, b in zip(layer_t, layer_c):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"layer {k} wrapped on the calibration set")

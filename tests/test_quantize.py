@@ -1,0 +1,344 @@
+"""PTQ + accuracy-validation subsystem tests (DESIGN.md §Quantization,
+EXPERIMENTS.md §Accuracy).
+
+Covers the three stages of `repro.quantize`: the hermetic procedural
+digit dataset, the float front door (training, checkpoint round-trip),
+and the model-agnostic `quantize_network` PTQ pipeline — including the
+cross-backend bit-identity of quantized-from-float LeNet-5 and the
+never-wrap invariant of calibration-chosen shifts (the property the
+calibration-drift fix makes checkable: the wrap- and clip-advanced
+scans agree at every layer iff nothing left int8).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.errors import CompileError
+from repro.core.network_compiler import calibrate_network
+from repro.quantize import (FloatLayer, QuantizedModel, choose_weight_exp,
+                            digit_dataset, digit_image, evaluate_net,
+                            float_model, init_params, load_checkpoint,
+                            quantize_bias, quantize_images,
+                            quantize_network, quantize_weights,
+                            save_checkpoint, train_or_load)
+from repro.quantize.ptq import INPUT_EXP, WEIGHT_EXP_MAX
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # optional dev dependency
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Dataset: hermetic, deterministic, balanced
+# ---------------------------------------------------------------------------
+
+class TestDigitDataset:
+    def test_deterministic_across_calls(self):
+        a_x, a_y = digit_dataset(12, seed=3, split="train")
+        b_x, b_y = digit_dataset(12, seed=3, split="train")
+        np.testing.assert_array_equal(a_x, b_x)
+        np.testing.assert_array_equal(a_y, b_y)
+
+    def test_index_stable_under_dataset_size(self):
+        # image i is a pure function of (seed, split, i) — not of n
+        small_x, _ = digit_dataset(4, seed=0, split="test")
+        big_x, _ = digit_dataset(16, seed=0, split="test")
+        np.testing.assert_array_equal(small_x, big_x[:4])
+
+    def test_labels_balanced(self):
+        _, y = digit_dataset(40, seed=1)
+        np.testing.assert_array_equal(y, np.arange(40) % 10)
+        assert y.dtype == np.int64
+
+    def test_splits_disjoint_streams(self):
+        tr, _ = digit_image(0, "train", 0)
+        te, _ = digit_image(0, "test", 0)
+        ca, _ = digit_image(0, "calib", 0)
+        assert not np.array_equal(tr, te)
+        assert not np.array_equal(tr, ca)
+
+    def test_shapes_range_and_channels(self):
+        x1, _ = digit_dataset(3, channels=1)
+        x3, _ = digit_dataset(3, channels=3)
+        assert x1.shape == (3, 1, 32, 32) and x1.dtype == np.float32
+        assert x3.shape == (3, 3, 32, 32)
+        for x in (x1, x3):
+            assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            digit_image(0, "validation", 0)
+        with pytest.raises(ValueError):
+            digit_image(0, "train", 0, channels=2)
+        with pytest.raises(ValueError):
+            digit_dataset(0)
+
+
+# ---------------------------------------------------------------------------
+# Quantization primitives
+# ---------------------------------------------------------------------------
+
+class TestPrimitives:
+    def test_choose_weight_exp(self):
+        assert choose_weight_exp(np.array([1.0])) == 6       # 64 <= 127 < 128
+        assert choose_weight_exp(np.array([0.5, -0.25])) == 7
+        assert choose_weight_exp(np.zeros((3, 3))) == WEIGHT_EXP_MAX
+        assert choose_weight_exp(np.array([300.0])) == -2    # 75 <= 127 < 150
+
+    def test_choose_weight_exp_maximal(self):
+        for w in (np.array([0.73]), np.array([1.9, -0.01]),
+                  np.array([130.0])):
+            e = choose_weight_exp(w)
+            m = float(np.abs(w).max())
+            assert round(m * 2.0 ** e) <= 127
+            assert round(m * 2.0 ** (e + 1)) > 127
+
+    def test_quantize_weights_and_bias(self):
+        w = quantize_weights(np.array([0.5, -0.5, 10.0]), 7)
+        np.testing.assert_array_equal(w, [64, -64, 127])     # clipped
+        assert w.dtype == np.int8
+        b = quantize_bias(np.array([0.25, -1.5]), 4)
+        np.testing.assert_array_equal(b, [4, -24])
+        assert b.dtype == np.int32
+
+    def test_quantize_images(self):
+        q = quantize_images(np.array([[[[0.0, 0.5, 1.0, 2.0]]]]))
+        np.testing.assert_array_equal(q.reshape(-1), [0, 64, 127, 127])
+        assert q.dtype == np.int8
+
+
+# ---------------------------------------------------------------------------
+# Float front door: checkpoints
+# ---------------------------------------------------------------------------
+
+class TestCheckpoints:
+    def test_roundtrip(self, tmp_path):
+        params = init_params("lenet5", seed=5)
+        path = tmp_path / "lenet5.npz"
+        save_checkpoint(path, params)
+        back = load_checkpoint(path, "lenet5")
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(back[k], params[k])
+
+    def test_wrong_names_rejected(self, tmp_path):
+        path = tmp_path / "bad.npz"
+        save_checkpoint(path, {"mystery_w": np.zeros((2, 2), np.float32)})
+        with pytest.raises(ValueError, match="topology"):
+            load_checkpoint(path, "lenet5")
+
+    def test_wrong_shape_rejected(self, tmp_path):
+        params = init_params("lenet5")
+        params["conv1_w"] = np.zeros((6, 1, 3, 3), np.float32)
+        path = tmp_path / "shape.npz"
+        save_checkpoint(path, params)
+        with pytest.raises(ValueError, match="conv1_w"):
+            load_checkpoint(path, "lenet5")
+
+    def test_train_or_load_prefers_existing_checkpoint(self, tmp_path):
+        params = init_params("lenet5", seed=9)
+        path = tmp_path / "ckpt.npz"
+        save_checkpoint(path, params)
+        loaded = train_or_load("lenet5", checkpoint=str(path))
+        for k in params:                      # loaded, not re-trained
+            np.testing.assert_array_equal(loaded[k], params[k])
+
+
+# ---------------------------------------------------------------------------
+# Float forwards
+# ---------------------------------------------------------------------------
+
+class TestFloatForward:
+    @pytest.mark.parametrize("net,channels", [("lenet5", 1),
+                                              ("resnet8", 3)])
+    def test_apply_shapes_and_determinism(self, net, channels):
+        from repro.quantize.train import APPLY_FNS
+        params = init_params(net, seed=2)
+        x, _ = digit_dataset(3, seed=2, channels=channels)
+        a = np.asarray(APPLY_FNS[net](params, x))
+        b = np.asarray(APPLY_FNS[net](params, x))
+        assert a.shape == (3, 10)
+        assert np.all(np.isfinite(a))
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# quantize_network: chain path (LeNet-5)
+# ---------------------------------------------------------------------------
+
+def _lenet_qm(margin=0, calib_n=4, seed=0):
+    params = init_params("lenet5", seed=seed)
+    calib_x, _ = digit_dataset(calib_n, seed=seed, split="calib")
+    return quantize_network(float_model("lenet5", params), calib_x,
+                            margin=margin)
+
+
+class TestChainPTQ:
+    def test_model_shape(self):
+        qm = _lenet_qm()
+        assert qm.kind == "chain" and qm.input_exp == INPUT_EXP
+        assert [s.name for s in qm.specs] == \
+            ["l1_conv", "l2_conv", "l3_conv", "l4_fc", "l5_fc"]
+        assert set(qm.weight_exps) == set(qm.shifts) == \
+            {s.name for s in qm.specs}
+        for s in qm.specs:
+            assert s.requant_shift == qm.shifts[s.name]
+            assert s.weights.dtype == np.int8
+
+    def test_cross_backend_bit_identity(self):
+        """Quantized-from-float LeNet-5 serves identically on the
+        oracle, fast and batched backends (satellite d)."""
+        qm = _lenet_qm()
+        net = qm.compile()
+        imgs = qm.calib_int
+        outs, _ = net.serve(list(imgs))
+        for i, img in enumerate(imgs):
+            for backend in ("oracle", "fast"):
+                np.testing.assert_array_equal(
+                    net.serve_one(img, backend=backend), outs[i],
+                    err_msg=f"{backend} != batched for image {i}")
+
+    @pytest.mark.parametrize("margin", [0, 1])
+    def test_shifts_never_wrap_on_calibration_set(self, margin):
+        """Property: calibration-chosen shifts keep every layer output
+        inside int8 on the calibration set — equivalently, the wrap-
+        and clip-advanced scans produce identical traces."""
+        qm = _lenet_qm(margin=margin)
+        _, wrap_t = calibrate_network(qm.specs, qm.calib_int)
+        _, clip_t = calibrate_network(qm.specs, qm.calib_int,
+                                      saturate=True)
+        for k, (lw, lc) in enumerate(zip(wrap_t, clip_t)):
+            for a, b in zip(lw, lc):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"layer {k} wrapped (margin={margin})")
+
+    def test_margin_adds_guard_octave(self):
+        # only the first layer sees identical accumulators under both
+        # margins (later layers see the re-scaled activations), so only
+        # its shift is provably exactly one octave apart
+        q0 = _lenet_qm(margin=0)
+        q1 = _lenet_qm(margin=1)
+        assert q1.shifts["l1_conv"] == q0.shifts["l1_conv"] + 1
+
+    def test_quantize_images_method(self):
+        qm = _lenet_qm()
+        x = np.full((1, 1, 32, 32), 0.5, np.float32)
+        np.testing.assert_array_equal(
+            qm.quantize_images(x),
+            quantize_images(x, input_exp=qm.input_exp))
+
+
+# ---------------------------------------------------------------------------
+# quantize_network: graph path (resnet8)
+# ---------------------------------------------------------------------------
+
+class TestGraphPTQ:
+    def test_resnet8_quantize_compile_serve(self):
+        from repro.models.resnet8 import reference_forward_int8
+        params = init_params("resnet8", seed=1)
+        calib_x, _ = digit_dataset(4, seed=1, split="calib", channels=3)
+        qm = quantize_network(float_model("resnet8", params), calib_x,
+                              margin=1)
+        assert qm.kind == "graph"
+        assert set(qm.weight_exps) == {
+            "stem", "b1a", "b1b", "t2a", "t2p", "t2b",
+            "t3a", "t3p", "t3b", "head", "fc"}
+        assert all(g.weights.dtype == np.int8
+                   for g in qm.graph.nodes.values()
+                   if g.kind in ("conv", "fc"))
+        net = qm.compile()
+        for img in qm.calib_int[:2]:
+            np.testing.assert_array_equal(
+                net.serve_one(img, backend="fast"),
+                reference_forward_int8(qm.graph, img))
+
+    def test_integer_graph_rejected(self):
+        from repro.models.resnet8 import (build_resnet8,
+                                          resnet8_random_weights)
+        calib_x, _ = digit_dataset(2, split="calib", channels=3)
+        with pytest.raises(CompileError) as ei:
+            quantize_network(build_resnet8(resnet8_random_weights()),
+                             calib_x)
+        assert ei.value.constraint == "ptq-float-weights"
+
+
+# ---------------------------------------------------------------------------
+# Validation errors
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_bad_layer_kind(self):
+        layers = [FloatLayer("p", "pool", np.ones((2, 2), np.float32))]
+        calib = np.zeros((1, 1, 2, 1), np.float32)
+        with pytest.raises(CompileError) as ei:
+            quantize_network(layers, calib)
+        assert ei.value.constraint == "node-kind"
+
+    def test_bad_calibration_batch(self):
+        layers = [FloatLayer("a", "fc", np.ones((4, 2), np.float32))]
+        with pytest.raises(CompileError) as ei:
+            quantize_network(layers, np.zeros((1, 2, 2), np.float32))
+        assert ei.value.constraint == "calibration"
+
+    def test_unknown_net_rejected(self):
+        with pytest.raises(ValueError, match="net must be"):
+            init_params("alexnet")
+        with pytest.raises(ValueError):
+            float_model("alexnet", {})
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: never-wrap over random float fc chains
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def _fc_chain_cases(draw):
+        d_in, d_mid, d_out = 8, draw(st.integers(2, 6)), 3
+        rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+        w1 = rng.uniform(-1.5, 1.5, (d_in, d_mid))
+        w2 = rng.uniform(-1.5, 1.5, (d_mid, d_out))
+        b1 = rng.uniform(-0.5, 0.5, (d_mid,))
+        imgs = rng.uniform(0.0, 1.0, (draw(st.integers(1, 4)), 1, 2, 4))
+        margin = draw(st.integers(0, 1))
+        return w1, b1, w2, imgs, margin
+
+    @given(_fc_chain_cases())
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_quantize_network_never_wraps(case):
+        w1, b1, w2, imgs, margin = case
+        layers = [
+            FloatLayer("h", "fc", np.asarray(w1, np.float32),
+                       bias=np.asarray(b1, np.float32), relu=True),
+            FloatLayer("o", "fc", np.asarray(w2, np.float32)),
+        ]
+        qm = quantize_network(layers, imgs, margin=margin)
+        _, wrap_t = calibrate_network(qm.specs, qm.calib_int)
+        _, clip_t = calibrate_network(qm.specs, qm.calib_int,
+                                      saturate=True)
+        for lw, lc in zip(wrap_t, clip_t):
+            for a, b in zip(lw, lc):
+                np.testing.assert_array_equal(a, b)
+else:                                   # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_quantize_network_never_wraps():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# End-to-end smoke (tiny scale; the full-scale run is the benchmark)
+# ---------------------------------------------------------------------------
+
+def test_evaluate_net_smoke(tmp_path):
+    rec = evaluate_net("lenet5", train_n=96, eval_n=24, calib_n=8,
+                       epochs=1, batch=16, spotcheck_n=4,
+                       checkpoint=str(tmp_path / "smoke.npz"))
+    assert rec["net"] == "lenet5" and rec["n_eval"] == 24
+    assert 0.0 <= rec["float_top1"] <= 1.0
+    assert 0.0 <= rec["int8_top1"] <= 1.0
+    assert rec["pallas_spotcheck_bit_identical"] in (True, False)
+    assert set(rec["shifts"]) == set(rec["weight_exps"])
+    # the checkpoint was written and satisfies the topology contract
+    load_checkpoint(tmp_path / "smoke.npz", "lenet5")

@@ -1,0 +1,118 @@
+"""Serving-layer validation fixes riding the quantization PR:
+
+* ``pad_ladder(max_batch <= 0)`` used to return the degenerate ``(0,)``
+  ladder (an engine that pads every request to batch zero); it now
+  raises a typed :class:`CompileError` with the stable constraint id
+  ``ladder-max-batch`` — at ladder construction, at policy construction
+  AND at ``NetworkProgram.padded_batch_sizes``.
+* ``nearest_rank`` truncated ``int(q * n)`` before the ceiling
+  division, so p99.9 of 1000 samples read rank 999 instead of 1000; it
+  now computes ``ceil(q · n / 100)`` exactly via ``fractions.Fraction``.
+"""
+
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core.errors import CompileError
+from repro.core.layer_compiler import LayerSpec
+from repro.core.network_compiler import compile_network
+from repro.serving.vta.metrics import nearest_rank
+from repro.serving.vta.policy import BatchPolicy, pad_ladder
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # optional dev dependency
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Ladder construction rejects non-positive max_batch at every layer
+# ---------------------------------------------------------------------------
+
+class TestLadderValidation:
+    @pytest.mark.parametrize("bad", [0, -3])
+    def test_pad_ladder_rejects(self, bad):
+        with pytest.raises(CompileError) as ei:
+            pad_ladder(bad)
+        assert ei.value.constraint == "ladder-max-batch"
+
+    def test_pad_ladder_still_powers_of_two(self):
+        assert pad_ladder(1) == (1,)
+        assert pad_ladder(8) == (1, 2, 4, 8)
+        assert pad_ladder(6) == (1, 2, 4, 6)
+
+    @pytest.mark.parametrize("bad", [0, -1])
+    def test_batch_policy_rejects(self, bad):
+        with pytest.raises(CompileError) as ei:
+            BatchPolicy(max_batch=bad)
+        assert ei.value.constraint == "policy-max-batch"
+
+    def test_padded_batch_sizes_rejects(self):
+        spec = LayerSpec("fc", "fc", np.eye(4, dtype=np.int8),
+                         requant_shift=0)
+        net = compile_network([spec], np.zeros((1, 4), np.int8))
+        assert net.padded_batch_sizes(4) == (1, 2, 4)
+        with pytest.raises(CompileError) as ei:
+            net.padded_batch_sizes(0)
+        assert ei.value.constraint == "ladder-max-batch"
+
+    def test_compile_error_is_value_error(self):
+        # pre-existing catchers used ValueError; the typed error must
+        # keep matching them
+        with pytest.raises(ValueError):
+            pad_ladder(0)
+
+
+# ---------------------------------------------------------------------------
+# nearest_rank: exact ceil(q·n/100)
+# ---------------------------------------------------------------------------
+
+class TestNearestRank:
+    def test_p999_of_1000_is_max(self):
+        # the old int(q*n) truncation read rank 999 here
+        vals = [float(i) for i in range(1, 1001)]
+        assert nearest_rank(vals, 99.9) == 1000.0
+
+    def test_documented_examples(self):
+        vals = [float(i) for i in range(1, 11)]
+        assert nearest_rank(vals, 50) == 5.0
+        assert nearest_rank(vals, 95) == 10.0
+        assert nearest_rank(vals, 0) == 1.0
+        assert nearest_rank(vals, 100) == 10.0
+
+    def test_no_float_rounding_at_boundaries(self):
+        # q·n/100 landing exactly on an integer must not pick up a
+        # stray ulp: p30 of 10 values is rank 3 exactly
+        vals = [float(i) for i in range(1, 11)]
+        assert nearest_rank(vals, 30) == 3.0
+        assert nearest_rank(vals, 30.0000001) == 4.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            nearest_rank([], 50)
+        with pytest.raises(ValueError):
+            nearest_rank([1.0], 101)
+        with pytest.raises(ValueError):
+            nearest_rank([1.0], -1)
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(1, 400), st.floats(0, 100), st.floats(0, 100))
+    @settings(max_examples=100, deadline=None)
+    def test_hypothesis_nearest_rank_spec(n, q1, q2):
+        vals = [float(i) for i in range(1, n + 1)]
+        # agrees with the documented definition, computed independently
+        want = max(1, math.ceil(Fraction(q1) * n / 100))
+        assert nearest_rank(vals, q1) == float(min(want, n))
+        # monotone in q; q=100 -> max
+        lo, hi = sorted((q1, q2))
+        assert nearest_rank(vals, lo) <= nearest_rank(vals, hi)
+        assert nearest_rank(vals, 100) == float(n)
+else:                                   # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_nearest_rank_spec():
+        pass
